@@ -1,0 +1,97 @@
+"""Shared benchmark fixtures: small *trained* MoE models (routing structure
+— expert preferences, layer-similarity — only emerges with training), cached
+to disk so every benchmark reuses them.
+
+Two model scales mirror the paper's pair:
+  "mixtral-smoke": 4 layers x 8 experts top-2   (Mixtral-8x7B family)
+  "phi-smoke":     4 layers x 16 experts top-2  (Phi-MoE family)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, smoke_variant
+from repro.configs.base import ModelConfig
+from repro.data.pipeline import DataConfig, batches, eval_batches
+from repro.models import Batch, Model, build_model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import init_state, train
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "results", "bench_models_l8")
+
+VOCAB = 512
+SEQ = 64
+
+
+def bench_config(kind: str = "mixtral-smoke") -> ModelConfig:
+    base = get_config("mixtral-8x7b" if kind == "mixtral-smoke" else "phi-moe")
+    cfg = smoke_variant(base, layers=8, d_model=128, vocab=VOCAB)
+    moe = dataclasses.replace(
+        cfg.moe, num_experts=8 if kind == "mixtral-smoke" else 16, top_k=2,
+        router_aux_weight=0.02)
+    return dataclasses.replace(cfg, name=kind, dtype="float32", moe=moe).validate()
+
+
+def data_config(seed: int = 0) -> DataConfig:
+    return DataConfig(vocab_size=VOCAB, seq_len=SEQ, batch_size=16, seed=seed)
+
+
+def get_trained(kind: str = "mixtral-smoke", steps: int = 300, log=lambda *_: None):
+    """Returns (model, params). Trains once, restores afterwards."""
+    cfg = bench_config(kind)
+    model = build_model(cfg)
+    cdir = os.path.join(CACHE_DIR, kind)
+    state = init_state(model, seed=0)
+    if ckpt.latest_step(cdir) is not None:
+        params, _ = ckpt.restore(cdir, state.params)
+        return model, params
+    it = batches(data_config())
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=30, total_steps=steps)
+    state, hist = train(model, ocfg, it, steps, log_every=100, log=log)
+    ckpt.save(cdir, state.params, step=steps)
+    return model, state.params
+
+
+def eval_token_stream(n_seqs: int = 8, seed: int = 77) -> list[np.ndarray]:
+    """Held-out token sequences for trace collection / NLL scoring."""
+    dc = dataclasses.replace(data_config(), seed=seed, batch_size=n_seqs)
+    b = next(batches(dc))
+    return [np.asarray(b.tokens[i]) for i in range(n_seqs)]
+
+
+def collect_trace(engine, seqs, max_len: int = 128):
+    """Run teacher-forced decoding over sequences, return the engine trace
+    with per-sequence boundaries."""
+    trace = []
+    breaks = []
+    for s in seqs:
+        breaks.append(len(trace))
+        engine.start_sequence(max_len)
+        for t in s:
+            engine.decode_token(int(t))
+        trace.extend(engine.trace)
+    return trace, breaks
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.s * 1e6

@@ -1,0 +1,60 @@
+"""§Roofline: render the dry-run matrix (results/dryrun.jsonl) as the
+per-(arch x shape x mesh) roofline table — compute/memory/collective terms,
+dominant bottleneck, and the MODEL_FLOPS / HLO_FLOPS usefulness ratio."""
+
+from __future__ import annotations
+
+import json
+import os
+
+_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+# prefer the latest matrix
+RESULTS = next((os.path.join(_DIR, n) for n in
+                ("dryrun_v3.jsonl", "dryrun_v2.jsonl", "dryrun.jsonl")
+                if os.path.exists(os.path.join(_DIR, n))),
+               os.path.join(_DIR, "dryrun.jsonl"))
+
+
+def load(path=RESULTS):
+    recs = []
+    if not os.path.exists(path):
+        return recs
+    seen = {}
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            seen[(r["arch"], r["shape"], r.get("mesh"))] = r
+    return list(seen.values())
+
+
+def run():
+    rows = []
+    recs = load()
+    if not recs:
+        return [("roofline_table", "MISSING",
+                 "run: python -m repro.launch.dryrun --all --out results/dryrun.jsonl")]
+    ok = [r for r in recs if r["status"] == "ok"]
+    fail = [r for r in recs if r["status"] == "fail"]
+    skip = [r for r in recs if r["status"] == "skip"]
+    rows.append(("dryrun_matrix_ok/fail/skip",
+                 f"{len(ok)}/{len(fail)}/{len(skip)}",
+                 "every non-skip pair must compile"))
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        rl = r["roofline"]
+        n_flops = r.get("model_flops", 0.0)
+        ratio = n_flops / (r["flops_per_chip"] * r["chips"]) if r["flops_per_chip"] else 0
+        rows.append((
+            f"roofline[{r['arch']}][{r['shape']}][{r['mesh']}]",
+            f"c={rl['compute_s']:.2e};m={rl['memory_s']:.2e};x={rl['collective_s']:.2e}",
+            f"{rl['bottleneck']}-bound; model/hlo flops={ratio:.2f}; "
+            f"peak_mem={r['memory']['peak_bytes_per_chip']/1e9:.1f}GB",
+        ))
+    for r in fail:
+        rows.append((f"roofline_FAIL[{r['arch']}][{r['shape']}][{r.get('mesh')}]",
+                     "FAIL", r.get("error", "?")[:120]))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(map(str, r)))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one module per paper table/figure.
+Prints ``name,value,derived`` CSV; exits non-zero if any module crashes."""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+MODULES = [
+    "kernel_bench",              # Pallas kernels + Table1/Fig2b model stats
+    "gate_norm_correlation",     # Fig 5a/5b
+    "predictor_accuracy",        # Fig 7a/7b
+    "expert_usage_stats",        # Fig 10a/10b
+    "stacked_gating_cost",       # Fig 17a
+    "accuracy_mixed_precision",  # Fig 3b + Table 3
+    "decode_speedup",            # Fig 14
+    "dynamic_loading_ablation",  # Fig 16
+    "prefetch_ablation",         # Fig 17b
+    "cache_policies",            # Fig 18a/18b
+    "roofline_report",           # EXPERIMENTS §Roofline (from dry-run matrix)
+]
+
+
+def main() -> None:
+    failures = 0
+    print("name,value,derived")
+    for name in MODULES:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(",".join(str(c) for c in row), flush=True)
+            print(f"_bench_wall[{name}],{time.time()-t0:.1f}s,", flush=True)
+        except Exception as e:  # noqa
+            failures += 1
+            traceback.print_exc()
+            print(f"_bench_FAILED[{name}],{type(e).__name__}:{e},", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

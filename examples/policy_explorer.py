@@ -1,0 +1,81 @@
+"""Tune the multidimensional cache policy weights on a calibration trace
+(the paper sets the four Eq. 3 weights "by minimizing the mixed precision
+expert cache miss penalties on a calibration dataset" — this script does
+exactly that, with a coarse simplex sweep) and sweep cache sizes.
+
+    PYTHONPATH=src python examples/policy_explorer.py
+"""
+
+import dataclasses
+import itertools
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.core import (EngineConfig, OffloadEngine, PolicyWeights, Thresholds,
+                        cache_policy_penalty)
+from repro.core.policies import LFU, LRU, MULTIDIM
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import train
+
+
+def main():
+    cfg = smoke_variant(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                        vocab=512)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    dc = DataConfig(vocab_size=512, seq_len=48, batch_size=16)
+    state, _ = train(model, OptimizerConfig(lr=1e-3, warmup_steps=20,
+                                            total_steps=120),
+                     batches(dc), 120, log_every=120)
+
+    # calibration trace
+    eng = OffloadEngine(model, state.params, EngineConfig(hi_slots=10, lo_slots=6))
+    rng = np.random.default_rng(0)
+    trace, breaks = [], []
+    for _ in range(4):
+        breaks.append(len(trace))
+        eng.start_sequence(64)
+        for t in rng.integers(0, 512, 40):
+            eng.decode_token(int(t))
+        trace.extend(eng.trace)
+
+    th = Thresholds(0.6, 0.9)
+    nl = eng.num_moe_layers
+
+    # coarse simplex sweep over Eq. 3 weights
+    grid = [0.0, 0.2, 0.4, 0.6]
+    best = (float("inf"), None)
+    for lru, lfu, lhu in itertools.product(grid, grid, grid):
+        fld = 1.0 - lru - lfu - lhu
+        if fld < -1e-9 or fld > 0.6:
+            continue
+        w = PolicyWeights(lru, lfu, lhu, max(fld, 0.0) if abs(fld) > 1e-9 else 0.0)
+        pen = cache_policy_penalty(trace, nl, w, 10, 6, th,
+                                   sequence_breaks=breaks)
+        if pen < best[0]:
+            best = (pen, w)
+    for name, w in (("LRU", LRU), ("LFU", LFU), ("MULTIDIM default", MULTIDIM),
+                    ("tuned", best[1])):
+        pen = cache_policy_penalty(trace, nl, w, 10, 6, th, sequence_breaks=breaks)
+        print(f"{name:18s} weights={w}  miss_penalty={pen:.1f}")
+
+    # cache-size sensitivity (paper: the policy advantage persists across sizes)
+    print("\ncache-size sweep (penalty, tuned vs LRU):")
+    for hi, lo in ((6, 3), (10, 6), (16, 8), (24, 12)):
+        p_t = cache_policy_penalty(trace, nl, best[1], hi, lo, th,
+                                   sequence_breaks=breaks)
+        p_l = cache_policy_penalty(trace, nl, LRU, hi, lo, th,
+                                   sequence_breaks=breaks)
+        print(f"  hi={hi:2d} lo={lo:2d}: tuned={p_t:7.1f}  lru={p_l:7.1f}  "
+              f"gain={100*(1-p_t/max(p_l,1e-9)):+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

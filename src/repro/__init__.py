@@ -1,0 +1,4 @@
+"""repro: HOBBIT (mixed-precision expert offloading for MoE inference) on
+TPU/JAX - multi-pod training/serving framework. See DESIGN.md."""
+
+__version__ = "0.1.0"

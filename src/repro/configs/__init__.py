@@ -1,0 +1,80 @@
+"""Architecture registry: --arch <id> resolves here."""
+
+from repro.configs.base import (
+    INPUT_SHAPES,
+    EncoderConfig,
+    InputShape,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    smoke_variant,
+)
+
+from repro.configs import (  # noqa: E402
+    deepseek_v2_236b,
+    gemma2_27b,
+    gemma3_27b,
+    granite_3_2b,
+    internvl2_26b,
+    jamba_v0_1_52b,
+    llama4_scout_17b_a16e,
+    mamba2_780m,
+    mixtral_8x7b,
+    nemotron_4_15b,
+    phi_moe,
+    whisper_tiny,
+)
+
+# The 10 assigned architectures (brief) ...
+ASSIGNED_ARCHS = {
+    "gemma2-27b": gemma2_27b.CONFIG,
+    "deepseek-v2-236b": deepseek_v2_236b.CONFIG,
+    "mamba2-780m": mamba2_780m.CONFIG,
+    "gemma3-27b": gemma3_27b.CONFIG,
+    "granite-3-2b": granite_3_2b.CONFIG,
+    "jamba-v0.1-52b": jamba_v0_1_52b.CONFIG,
+    "llama4-scout-17b-a16e": llama4_scout_17b_a16e.CONFIG,
+    "internvl2-26b": internvl2_26b.CONFIG,
+    "nemotron-4-15b": nemotron_4_15b.CONFIG,
+    "whisper-tiny": whisper_tiny.CONFIG,
+}
+
+# ... plus the paper's own evaluation models.
+PAPER_ARCHS = {
+    "mixtral-8x7b": mixtral_8x7b.CONFIG,
+    "phi-moe": phi_moe.CONFIG,
+}
+
+ARCHS = {**ASSIGNED_ARCHS, **PAPER_ARCHS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+# (arch, shape) pairs excluded from the dry-run matrix, with reasons
+# (mirrors DESIGN.md §5).
+LONG_CONTEXT_SKIPS = {
+    "deepseek-v2-236b": "pure full attention (MLA is still global); no sub-quadratic variant",
+    "granite-3-2b": "pure full attention",
+    "nemotron-4-15b": "pure full attention",
+    "internvl2-26b": "pure full attention backbone",
+    "whisper-tiny": "enc-dec decoder context is 448 by construction",
+}
+
+
+def shape_supported(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch in LONG_CONTEXT_SKIPS:
+        return False
+    return True
+
+
+__all__ = [
+    "ARCHS", "ASSIGNED_ARCHS", "PAPER_ARCHS", "INPUT_SHAPES",
+    "LONG_CONTEXT_SKIPS", "EncoderConfig", "InputShape", "MLAConfig",
+    "ModelConfig", "MoEConfig", "SSMConfig", "get_config", "shape_supported",
+    "smoke_variant",
+]

@@ -1,0 +1,24 @@
+from repro.core.cache import CacheStats, MultidimensionalCache
+from repro.core.engine import EngineConfig, OffloadEngine
+from repro.core.loader import DynamicExpertLoader, LoadTask
+from repro.core.policies import (FLD, LFU, LHU, LRU, MULTIDIM, NAMED_POLICIES,
+                                 PolicyWeights)
+from repro.core.predictor import AdaptiveExpertPredictor, gating_input_similarity
+from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
+                                calibrate_thresholds, gate_output_correlation,
+                                precision_decisions, unimportance_scores)
+from repro.core.simulator import (HARDWARE, HobbitSimConfig, JETSON_ORIN,
+                                  OffloadSimulator, RTX4090, TPU_V5E_HOST,
+                                  TraceLayer, cache_policy_penalty,
+                                  simulate_systems)
+
+__all__ = [
+    "CacheStats", "MultidimensionalCache", "EngineConfig", "OffloadEngine",
+    "DynamicExpertLoader", "LoadTask", "FLD", "LFU", "LHU", "LRU", "MULTIDIM",
+    "NAMED_POLICIES", "PolicyWeights", "AdaptiveExpertPredictor",
+    "gating_input_similarity", "PREC_HI", "PREC_LO", "PREC_SKIP", "Thresholds",
+    "calibrate_thresholds", "gate_output_correlation", "precision_decisions",
+    "unimportance_scores", "HARDWARE", "HobbitSimConfig", "JETSON_ORIN",
+    "OffloadSimulator", "RTX4090", "TPU_V5E_HOST", "TraceLayer",
+    "cache_policy_penalty", "simulate_systems",
+]

@@ -1,0 +1,168 @@
+"""Multidimensional Cache Manager (HOBBIT §3.4): two-pool (high/low precision)
+slot-based expert cache with Eq. 3 eviction, prediction pinning, and
+per-sequence record resets.
+
+The manager tracks *metadata only* (slot table, usage records); the engine
+owns the device buffers and writes weights into the slot the manager assigns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Set, Tuple
+
+from repro.core.policies import ExpertKey, PolicyRecords, PolicyWeights, MULTIDIM
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits_hi: int = 0
+    hits_lo: int = 0
+    misses_hi: int = 0
+    misses_lo: int = 0
+    evictions: int = 0
+
+    @property
+    def hits(self):
+        return self.hits_hi + self.hits_lo
+
+    @property
+    def misses(self):
+        return self.misses_hi + self.misses_lo
+
+    def hit_ratio(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+    def miss_penalty(self, lo_cost_ratio: float = 0.25) -> float:
+        """Paper's mixed-precision penalty: hi miss costs 1, lo miss B_l/B_h."""
+        return self.misses_hi + lo_cost_ratio * self.misses_lo
+
+
+class PrecisionPool:
+    """One fixed-capacity slot pool (hi or lo precision)."""
+
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self.slot_of: Dict[ExpertKey, int] = {}
+        self.key_of: Dict[int, ExpertKey] = {}
+        self.free = list(range(capacity))
+
+    def lookup(self, key: ExpertKey) -> Optional[int]:
+        return self.slot_of.get(key)
+
+    def contains(self, key: ExpertKey) -> bool:
+        return key in self.slot_of
+
+    def insert(self, key: ExpertKey, slot: int):
+        self.slot_of[key] = slot
+        self.key_of[slot] = key
+
+    def remove(self, key: ExpertKey) -> int:
+        slot = self.slot_of.pop(key)
+        del self.key_of[slot]
+        return slot
+
+
+class MultidimensionalCache:
+    """Two pools + shared policy records + prediction pin set."""
+
+    def __init__(self, num_layers: int, hi_slots: int, lo_slots: int,
+                 weights: PolicyWeights = MULTIDIM):
+        self.records = PolicyRecords(num_layers)
+        self.hi = PrecisionPool(hi_slots)
+        self.lo = PrecisionPool(lo_slots)
+        self.weights = weights
+        self.pinned: Set[Tuple[ExpertKey, bool]] = set()  # (key, is_hi)
+        self.hard_pinned: Set[Tuple[ExpertKey, bool]] = set()
+        self.stats = CacheStats()
+
+    # ------------- sequence / token lifecycle -------------
+    def new_sequence(self):
+        self.records.reset()
+        self.pinned.clear()
+        self.hard_pinned.clear()
+
+    def advance_token(self):
+        self.records.advance_token()
+        self.pinned.clear()
+        self.hard_pinned.clear()
+
+    # ------------- pinning (predicted experts; §3.3 "mask") -------------
+    def pin(self, key: ExpertKey, high_precision: bool, hard: bool = False):
+        """Soft pins (predicted experts) yield under slot pressure; hard pins
+        (the experts of the layer currently executing) never do."""
+        self.pinned.add((key, high_precision))
+        if hard:
+            self.hard_pinned.add((key, high_precision))
+
+    # ------------- queries -------------
+    def lookup(self, key: ExpertKey, high_precision: bool) -> Optional[int]:
+        pool = self.hi if high_precision else self.lo
+        return pool.lookup(key)
+
+    def probe(self, key: ExpertKey, high_precision: bool, *,
+              count_stats: bool = True) -> Optional[int]:
+        """lookup + stats + usage record update on hit."""
+        slot = self.lookup(key, high_precision)
+        if count_stats:
+            if slot is not None:
+                if high_precision:
+                    self.stats.hits_hi += 1
+                else:
+                    self.stats.hits_lo += 1
+            else:
+                if high_precision:
+                    self.stats.misses_hi += 1
+                else:
+                    self.stats.misses_lo += 1
+        if slot is not None:
+            self.records.on_use(key, high_precision)
+        return slot
+
+    # ------------- admission / eviction -------------
+    def admit(self, key: ExpertKey, high_precision: bool,
+              current_layer: int) -> Tuple[int, Optional[ExpertKey]]:
+        """Assign a slot for `key` (evicting the lowest-priority unpinned
+        resident if full).  Returns (slot, evicted_key_or_None).  The caller
+        must then write the weights into the returned slot."""
+        pool = self.hi if high_precision else self.lo
+        existing = pool.lookup(key)
+        if existing is not None:
+            self.records.on_use(key, high_precision)
+            return existing, None
+        evicted = None
+        if pool.free:
+            slot = pool.free.pop()
+        else:
+            victim = self._select_victim(pool, high_precision, current_layer)
+            slot = pool.remove(victim)
+            evicted = victim
+            self.stats.evictions += 1
+        pool.insert(key, slot)
+        self.records.on_use(key, high_precision)
+        return slot, evicted
+
+    def _select_victim(self, pool: PrecisionPool, is_hi: bool,
+                       current_layer: int) -> ExpertKey:
+        best_key, best_p = None, float("inf")
+        for key in pool.slot_of:
+            if (key, is_hi) in self.pinned:
+                continue
+            p = self.records.priority(key, self.weights, current_layer)
+            if p < best_p:
+                best_key, best_p = key, p
+        if best_key is None:
+            # everything soft-pinned: sacrifice a predicted expert, but never
+            # one the currently-executing layer needs (hard pin)
+            cands = [k for k in pool.slot_of
+                     if (k, is_hi) not in self.hard_pinned]
+            if not cands:
+                cands = list(pool.slot_of)  # pathological: cache < top_k
+            best_key = min(cands, key=lambda k: self.records.priority(
+                k, self.weights, current_layer))
+        return best_key
+
+    # ------------- views -------------
+    def resident(self, high_precision: bool) -> Set[ExpertKey]:
+        return set((self.hi if high_precision else self.lo).slot_of)

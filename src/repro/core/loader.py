@@ -1,0 +1,113 @@
+"""Token-level Dynamic Expert Loader (HOBBIT §3.2): Expert Scorer + Task
+Queue + Expert Scheduler.
+
+On a cache miss the Expert Scorer turns gate magnitudes into per-expert
+precision decisions (Eq. 2 + T1/T2); the scheduler drains the queue,
+fetching weights from host storage via a caller-provided fetch function and
+admitting them into the cache (which may evict).  On-demand tasks are
+blocking for the current layer; prefetch tasks are overlapped (their cost is
+accounted to the simulated timeline, not the critical path, when they finish
+before the layer that needs them begins — see simulator.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Deque, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.cache import MultidimensionalCache
+from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
+                                precision_decisions)
+
+ON_DEMAND, PREFETCH = "on_demand", "prefetch"
+
+
+@dataclasses.dataclass
+class LoadTask:
+    layer: int
+    expert: int
+    precision: int              # PREC_HI | PREC_LO
+    reason: str                 # ON_DEMAND | PREFETCH
+    bytes: int = 0              # filled by the scheduler from the cost model
+
+
+@dataclasses.dataclass
+class LoadReport:
+    tasks: List[LoadTask]
+    skipped: List[int]          # expert ids skipped this layer (score > T2)
+    hit_slots: List[Tuple[int, int, int]]   # (expert, precision, slot)
+
+
+class DynamicExpertLoader:
+    def __init__(self, cache: MultidimensionalCache, th: Thresholds,
+                 fetch_fn: Callable[[int, int, int, int], None],
+                 bytes_fn: Callable[[int], int]):
+        """fetch_fn(layer, expert, precision, slot): writes the expert weights
+        into the assigned device pool slot (engine-provided closure).
+        bytes_fn(precision) -> transfer size."""
+        self.cache = cache
+        self.th = th
+        self.fetch_fn = fetch_fn
+        self.bytes_fn = bytes_fn
+        self.queue: Deque[LoadTask] = deque()
+        self.loaded_bytes = 0
+        self.n_loads = {PREC_HI: 0, PREC_LO: 0}
+        self.n_skips = 0
+
+    # ---------------- Expert Scorer ----------------
+    def score_and_enqueue(self, layer: int, experts: List[int],
+                          gate_vals: np.ndarray) -> LoadReport:
+        """Handle the on-demand expert set of one MoE layer for one token."""
+        dec = precision_decisions(gate_vals, self.th)
+        # hard pins protect only the layer being executed; earlier layers'
+        # experts already ran and may be evicted again
+        self.cache.hard_pinned.clear()
+        tasks, skipped, hits = [], [], []
+        for e, d in zip(experts, dec):
+            if d == PREC_SKIP:
+                skipped.append(e)
+                self.n_skips += 1
+                continue
+            is_hi = d == PREC_HI
+            # the experts of the layer being executed must never be evicted
+            # by a concurrent prefetch admission
+            self.cache.pin((layer, e), is_hi, hard=True)
+            slot = self.cache.probe((layer, e), is_hi)
+            if slot is not None:
+                hits.append((e, d, slot))
+            else:
+                t = LoadTask(layer, e, int(d), ON_DEMAND, self.bytes_fn(int(d)))
+                tasks.append(t)
+                self.queue.append(t)
+        return LoadReport(tasks, skipped, hits)
+
+    def enqueue_prefetch(self, layer: int, experts: List[int],
+                         decisions: np.ndarray):
+        for e, d in zip(experts, decisions):
+            if d == PREC_SKIP:
+                continue
+            if self.cache.lookup((layer, e), d == PREC_HI) is None:
+                self.queue.append(
+                    LoadTask(layer, e, int(d), PREFETCH, self.bytes_fn(int(d))))
+
+    # ---------------- Expert Scheduler ----------------
+    def drain(self, current_layer: int) -> List[Tuple[LoadTask, int]]:
+        """Execute all queued tasks (on-demand first).  Returns
+        [(task, slot)] in execution order."""
+        done = []
+        ordered = sorted(self.queue, key=lambda t: t.reason != ON_DEMAND)
+        self.queue.clear()
+        for t in ordered:
+            is_hi = t.precision == PREC_HI
+            if self.cache.lookup((t.layer, t.expert), is_hi) is not None:
+                continue  # raced: already resident (e.g. dup prefetch)
+            slot, _evicted = self.cache.admit((t.layer, t.expert), is_hi,
+                                              current_layer)
+            self.fetch_fn(t.layer, t.expert, t.precision, slot)
+            self.loaded_bytes += t.bytes
+            self.n_loads[t.precision] += 1
+            done.append((t, slot))
+        return done

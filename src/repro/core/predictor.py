@@ -1,0 +1,123 @@
+"""Layer-level Adaptive Expert Predictor (HOBBIT §3.3).
+
+Uses the *current* layer's gating input (the pre-FFN hidden state) as a proxy
+for the gating inputs of the next `p` layers — valid because the residual
+stream changes slowly across layers (Fig. 7a) — and evaluates all `p` gate
+matmuls at once with the Stacking Computer (our Pallas stacked_gating kernel).
+
+The adaptive walk: predict layer l+1; if all predicted experts are cached,
+continue to l+2, ... stop at the first layer with a miss (that's the one
+worth prefetching for) or after `p` layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache import MultidimensionalCache
+from repro.core.scoring import Thresholds, precision_decisions, PREC_HI, PREC_SKIP
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class Prediction:
+    layer: int                 # the layer these experts belong to
+    experts: List[int]         # predicted top-k
+    gate_vals: np.ndarray      # predicted gate magnitudes (for precision choice)
+
+
+class AdaptiveExpertPredictor:
+    """Holds stacked router weights (L, D, E); predicts future layers' experts."""
+
+    def __init__(self, routers: Sequence[np.ndarray], top_k: int,
+                 p: int = 2, mode: str = "auto"):
+        self.gates = jnp.asarray(np.stack([np.asarray(r) for r in routers]))
+        self.num_layers, self.d_model, self.num_experts = self.gates.shape
+        self.top_k = top_k
+        self.p = p
+        self.mode = mode
+        # accuracy bookkeeping: self.eval[d] = (correct_top1, total) for dist d
+        self._acc: dict[int, List[int]] = {}
+
+    # ---------------- raw prediction ----------------
+    def predict_layers(self, hidden: np.ndarray, layer: int,
+                       p: Optional[int] = None) -> List[Prediction]:
+        """hidden: (D,) gating input at `layer`.  Predict layers l+1..l+p via
+        one stacked gating call."""
+        p = p if p is not None else self.p
+        lo, hi = layer + 1, min(layer + p, self.num_layers - 1)
+        if lo > hi:
+            return []
+        x = jnp.asarray(hidden, self.gates.dtype)[None, :]        # (1, D)
+        stack = self.gates[lo : hi + 1]                            # (P, D, E)
+        logits = kops.stacked_gating(x, stack, mode=self.mode)     # (P, 1, E)
+        probs = np.asarray(jnp.squeeze(
+            jnp.exp(logits - jnp.max(logits, -1, keepdims=True))
+            / jnp.sum(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)),
+                      -1, keepdims=True), axis=1))
+        preds = []
+        for i, l in enumerate(range(lo, hi + 1)):
+            idx = np.argsort(-probs[i])[: self.top_k]
+            preds.append(Prediction(l, idx.tolist(), probs[i][idx]))
+        return preds
+
+    # ---------------- adaptive walk ----------------
+    def adaptive_walk(self, hidden: np.ndarray, layer: int,
+                      cache: MultidimensionalCache,
+                      th: Thresholds) -> List[Tuple[Prediction, np.ndarray]]:
+        """Walk forward; return [(prediction, precision_decisions)] for the
+        first future layer whose predicted experts are not fully cached
+        (the paper preloads exactly those), or [] if everything is resident."""
+        preds = self.predict_layers(hidden, layer)
+        for pr in preds:
+            dec = precision_decisions(pr.gate_vals, th)
+            missing = []
+            for e, d in zip(pr.experts, dec):
+                if d == PREC_SKIP:
+                    continue
+                if cache.lookup((pr.layer, e), d == PREC_HI) is None:
+                    missing.append(True)
+                else:
+                    missing.append(False)
+            # pin resident predicted experts either way (§3.3 "mask")
+            for e, d in zip(pr.experts, dec):
+                if d != PREC_SKIP:
+                    cache.pin((pr.layer, e), d == PREC_HI)
+            if any(missing):
+                return [(pr, dec)]
+        return []
+
+    # ---------------- accuracy bookkeeping ----------------
+    def record_accuracy(self, predicted: Prediction, actual_top: Sequence[int],
+                        distance: int):
+        c, t = self._acc.get(distance, [0, 0])
+        c += int(predicted.experts[0] in list(actual_top[: 1]))
+        t += 1
+        self._acc[distance] = [c, t]
+
+    def accuracy(self) -> dict[int, float]:
+        return {d: c / t for d, (c, t) in sorted(self._acc.items()) if t}
+
+
+def gating_input_similarity(hiddens: np.ndarray, max_dist: int = 3) -> dict[int, float]:
+    """Mean cosine similarity of gating inputs between layer l and l+d
+    (Fig. 7a reproduction).  hiddens: (L, D) per-layer gating inputs for one
+    token (or (L, T, D) averaged over tokens)."""
+    h = np.asarray(hiddens, np.float64)
+    if h.ndim == 2:
+        h = h[:, None, :]
+    l = h.shape[0]
+    out = {}
+    for d in range(1, max_dist + 1):
+        sims = []
+        for i in range(l - d):
+            a, b = h[i], h[i + d]
+            num = (a * b).sum(-1)
+            den = np.linalg.norm(a, axis=-1) * np.linalg.norm(b, axis=-1) + 1e-12
+            sims.append(num / den)
+        out[d] = float(np.mean(sims))
+    return out

@@ -1,0 +1,3 @@
+from repro.kernels.ops import dequant_matmul, flash_decode, stacked_gating
+
+__all__ = ["dequant_matmul", "flash_decode", "stacked_gating"]

@@ -1,0 +1,100 @@
+"""Fused groupwise-dequant x matmul Pallas TPU kernel.
+
+This is HOBBIT's expert-compute hot-spot, adapted to TPU: instead of
+dequantizing a low-precision expert to bf16 in HBM and then running a GEMM
+(the GPU flow: cudaMemcpy + dequant pass + cuBLAS), the packed int8/int4/int2
+codes stay packed in HBM and are expanded to fp32 *inside the matmul tile
+loop, in VREGs*, after the DMA into VMEM.  Decode-time expert FFNs are memory
+bound, so shrinking the bytes the MXU pipeline pulls from HBM by 2-8x moves
+the memory-roofline term directly.
+
+Layout contract (matches repro.quant.quantize):
+    x      (M, K)            bf16/f32 activations
+    data   (K // pack, N)    int8, `pack` codes per byte along K
+    scale  (K // group, N)   f32 groupwise scales
+    out    (M, N)            f32
+
+Tiling: grid (M/bm, N/bn, K/bk) with out-block accumulation over the k axis.
+``bk`` must be a multiple of the quantization group size so each k-step sees
+an integer number of scale rows; block shapes are MXU-aligned (128 lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.quant.quantize import PACK_FACTOR
+
+
+def _unpack_block(data_blk, bits: int):
+    """(bk//pack, bn) int8 -> (bk, bn) f32 signed codes, inside the kernel."""
+    pack = PACK_FACTOR[bits]
+    if pack == 1:
+        return data_blk.astype(jnp.float32)
+    u = data_blk.astype(jnp.int32) & 0xFF  # treat as unsigned byte lanes
+    mask = (1 << bits) - 1
+    half = 1 << (bits - 1)
+    parts = []
+    for i in range(pack):
+        nib = (u >> (bits * i)) & mask
+        parts.append(jnp.where(nib >= half, nib - (1 << bits), nib))
+    codes = jnp.stack(parts, axis=1)  # (bk//pack, pack, bn)
+    kp, _, bn = codes.shape
+    return codes.reshape(kp * pack, bn).astype(jnp.float32)
+
+
+def _dequant_matmul_kernel(x_ref, data_ref, scale_ref, o_ref, *, bits: int,
+                           group_size: int, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    codes = _unpack_block(data_ref[...], bits)          # (bk, bn) f32
+    scales = scale_ref[...]                              # (bk//G, bn) f32
+    bk, bn = codes.shape
+    groups = bk // group_size
+    w = codes.reshape(groups, group_size, bn) * scales.reshape(groups, 1, bn)
+    w = w.reshape(bk, bn)                                # dequantized tile
+    x = x_ref[...].astype(jnp.float32)                   # (bm, bk)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "block_m", "block_n", "block_k", "interpret"),
+)
+def dequant_matmul_pallas(x, data, scale, *, bits: int, group_size: int,
+                          block_m: int = 128, block_n: int = 128,
+                          block_k: int = 256, interpret: bool = False):
+    """y = x @ dequant(data, scale).  Shapes must divide the block sizes."""
+    m, k = x.shape
+    kp, n = data.shape
+    pack = PACK_FACTOR[bits]
+    assert kp * pack == k, (kp, pack, k)
+    assert block_k % group_size == 0, "block_k must cover whole quant groups"
+    assert block_k % pack == 0
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (m, n, k)
+    k_steps = k // block_k
+
+    grid = (m // block_m, n // block_n, k_steps)
+    kernel = functools.partial(
+        _dequant_matmul_kernel, bits=bits, group_size=group_size, k_steps=k_steps
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k // pack, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k // group_size, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, data, scale)

@@ -1,0 +1,95 @@
+"""Flash-decode attention Pallas kernel: one query token per sequence
+against a long KV cache, online-softmax over KV blocks.
+
+Decode attention is the second memory-bound hot-spot of MoE serving (after
+expert weights): the whole KV cache streams through the MXU once per token.
+The flash formulation keeps one (block_s, head_dim) KV tile in VMEM at a
+time and carries running max/denominator statistics, so the score vector is
+never materialized in HBM — on TPU this bounds VMEM use to the tile size
+and lets the DMA pipeline hide the HBM streaming.
+
+Contract:
+    q        (B, H, hd)        current-token queries (kv heads pre-expanded)
+    k, v     (B, S, H, hd)     cache
+    lengths  (B, 1)            #valid cache slots per sequence (<= S)
+    out      o (B, H, hd) fp32, m (B, H, 1), l (B, H, 1)
+Final output = o / l (done by the wrapper).
+
+Grid (B, H, S/block_s); the (o, m, l) blocks are revisited across the S axis
+and updated with the standard rescaling recurrence.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref,
+                         *, block_s: int, scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)               # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (bs, hd)
+    length = len_ref[0, 0]
+
+    logits = (k @ q) * scale                              # (bs,)
+    pos = s_idx * block_s + jax.lax.iota(jnp.int32, block_s)
+    logits = jnp.where(pos < length, logits, NEG_INF)
+
+    m_old = m_ref[0, 0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(logits))
+    p = jnp.exp(logits - m_new)                           # (bs,)
+    corr = jnp.exp(m_old - m_new)
+    l_ref[0, 0, 0] = l_ref[0, 0, 0] * corr + jnp.sum(p)
+    o_ref[0, 0, :] = o_ref[0, 0, :] * corr + p @ v
+    m_ref[0, 0, 0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def flash_decode_pallas(q, k, v, lengths, *, block_s: int = 256,
+                        interpret: bool = False, scale: float | None = None):
+    """Returns attention output (B, H, hd) fp32."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    assert k.shape == (b, s, h, hd) and v.shape == k.shape
+    assert s % block_s == 0, (s, block_s)
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    lengths2 = lengths.reshape(b, 1).astype(jnp.int32)
+
+    kernel = functools.partial(_flash_decode_kernel, block_s=block_s,
+                               scale=scale)
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid=(b, h, s // block_s),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bb, hh, ss: (bb, hh, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),
+            pl.BlockSpec((1, block_s, 1, hd), lambda bb, hh, ss: (bb, ss, hh, 0)),
+            pl.BlockSpec((1, 1), lambda bb, hh, ss: (bb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bb, hh, ss: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, ss: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, ss: (bb, hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, lengths2)
+    return o / jnp.maximum(l, 1e-30)

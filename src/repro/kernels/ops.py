@@ -1,0 +1,99 @@
+"""Public jit'd wrappers for the Pallas kernels, with shape padding and a
+CPU-friendly execution policy.
+
+On the TPU target the kernels run compiled; on this CPU container they run in
+``interpret=True`` mode (Pallas executes the kernel body in Python) so every
+test validates the real kernel body.  ``mode`` selects:
+
+    "auto"      pallas-interpret on CPU, pallas-compiled on TPU
+    "pallas"    force the pallas path (compiled on TPU, interpret elsewhere)
+    "xla"       reference dense path (dequantize + dot) — used by the model
+                code when running big CPU smoke tests where interpret-mode
+                python execution would be too slow.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.stacked_gating import stacked_gating_pallas
+from repro.quant.quantize import PACK_FACTOR, QTensor
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(v: int, m: int) -> int:
+    return (v + m - 1) // m * m
+
+
+def dequant_matmul(x, q: QTensor, *, mode: str = "auto",
+                   block_m: int = 128, block_n: int = 128, block_k: int = 256):
+    """y = x @ dequant(q), fused.  x: (..., K); q: K x N quantized."""
+    if mode == "xla" or (mode == "auto" and not _on_tpu()):
+        return ref.dequant_matmul_ref(x, q)
+
+    interpret = not _on_tpu()
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    m, n = x2.shape[0], q.data.shape[-1]
+    pack = PACK_FACTOR[q.bits]
+
+    bm = min(block_m, _pad_to(m, 8))
+    bk = min(block_k, k)
+    bn = min(block_n, n)
+    mp, np_, kp = _pad_to(m, bm), _pad_to(n, bn), _pad_to(k, bk)
+    if (mp, np_, kp) != (m, n, k):
+        x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+        data = jnp.pad(q.data, ((0, (kp - k) // pack), (0, np_ - n)))
+        scale = jnp.pad(q.scale, ((0, (kp - k) // q.group_size), (0, np_ - n)))
+    else:
+        data, scale = q.data, q.scale
+    out = dequant_matmul_pallas(
+        x2, data, scale, bits=q.bits, group_size=q.group_size,
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
+    return out[:m, :n].reshape(*lead, n)
+
+
+def stacked_gating(x, gates, *, mode: str = "auto", block_d: int = 512):
+    """logits (P, B, E) for P stacked gate matrices; see stacked_gating.py."""
+    if mode == "xla" or (mode == "auto" and not _on_tpu()):
+        return ref.stacked_gating_ref(x, gates)
+    interpret = not _on_tpu()
+    b, d = x.shape
+    p, _, e = gates.shape
+    bd = min(block_d, d)
+    dp = _pad_to(d, bd)
+    if dp != d:
+        x = jnp.pad(x, ((0, 0), (0, dp - d)))
+        gates = jnp.pad(gates, ((0, 0), (0, dp - d), (0, 0)))
+    return stacked_gating_pallas(x, gates, block_d=bd, interpret=interpret)
+
+
+def flash_decode(q, k, v, lengths, *, mode: str = "auto", block_s: int = 256):
+    """Single-token decode attention; expands GQA kv heads to q heads.
+    q: (B,Hq,hd); k/v: (B,S,Hkv,hd); lengths: (B,)."""
+    b, hq, hd = q.shape
+    hkv = k.shape[2]
+    if hkv != hq:
+        g = hq // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if mode == "xla" or (mode == "auto" and not _on_tpu()):
+        return ref.flash_decode_ref(q, k, v, lengths)
+    interpret = not _on_tpu()
+    s = k.shape[1]
+    bs = min(block_s, s)
+    sp = _pad_to(s, bs)
+    if sp != s:
+        k = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    return flash_decode_pallas(q, k, v, lengths, block_s=bs, interpret=interpret)

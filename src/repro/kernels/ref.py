@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.quantize import QTensor, dequantize
+
+
+def dequant_matmul_ref(x, q: QTensor):
+    """y = x @ dequant(q) computed with the straightforward dense path."""
+    w = dequantize(q, dtype=jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+
+
+def stacked_gating_ref(x, gates):
+    """logits[p] = x @ gates[p] via einsum."""
+    return jnp.einsum(
+        "bd,pde->pbe", x.astype(jnp.float32), gates.astype(jnp.float32),
+        preferred_element_type=jnp.float32)
+
+
+def flash_decode_ref(q, k, v, lengths, scale=None):
+    """Single-token decode attention oracle: masked softmax over the cache.
+    q: (B,H,hd); k/v: (B,S,H,hd); lengths: (B,)."""
+    b, h, hd = q.shape
+    s = k.shape[1]
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.arange(s)[None, None, :] < lengths.reshape(-1, 1, 1)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32))

@@ -1,0 +1,61 @@
+"""Stacked gating Pallas kernel — the paper's "Stacking Computer" (HOBBIT §3.3).
+
+The adaptive expert predictor needs the gate logits of the next ``p`` layers
+evaluated on the *current* layer's hidden state.  Computed naively that is
+``p`` sequential (D x E) matvecs; the paper's observation is that E is tiny
+(8..160), so all ``p`` gates can be stacked into a single (p*E) output matmul
+whose cost is flat in ``p`` (Fig. 17a).
+
+Kernel contract:
+    x        (B, D)        activations (bf16/f32)
+    gates    (P, D, E)     stacked gate weights for the next P layers
+    out      (P, B, E)     f32 logits
+
+Grid over P: one gate layer per grid step; each step is a (B,D)x(D,E) tile
+matmul held fully in VMEM (B and E are small at decode time; D is blocked).
+Top-k selection happens outside the kernel (jnp.top_k on (P, B, E)).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stacked_gating_kernel(x_ref, g_ref, o_ref, *, k_steps: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (B, bd)
+    g = g_ref[0].astype(jnp.float32)            # (bd, E)
+    o_ref[0] += jnp.dot(x, g, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def stacked_gating_pallas(x, gates, *, block_d: int = 512, interpret: bool = False):
+    """logits[p] = x @ gates[p] for all p in one pallas_call."""
+    b, d = x.shape
+    p, dg, e = gates.shape
+    assert dg == d
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    k_steps = d // block_d
+
+    kernel = functools.partial(_stacked_gating_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(p, k_steps),
+        in_specs=[
+            pl.BlockSpec((b, block_d), lambda ip, kk: (0, kk)),
+            pl.BlockSpec((1, block_d, e), lambda ip, kk: (ip, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, b, e), lambda ip, kk: (ip, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, b, e), jnp.float32),
+        interpret=interpret,
+    )(x, gates)

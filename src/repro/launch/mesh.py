@@ -1,0 +1,33 @@
+"""Production mesh definitions (TPU v5e).
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the pod axis is
+pure data parallelism (gradient all-reduce crosses the pod boundary over DCN).
+
+Defined as functions so importing this module never touches jax device
+state (jax locks the platform device count on first backend init).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants for the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The batch-sharding axes of a mesh (pod joins data when present)."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def num_chips(mesh) -> int:
+    return mesh.devices.size

@@ -1,0 +1,128 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute term    = HLO_FLOPs_per_chip / peak_FLOPs_per_chip
+memory term     = HLO_bytes_per_chip / HBM_bw_per_chip
+collective term = collective_bytes_per_chip / ICI_link_bw
+
+The post-SPMD HLO module is per-device, so cost_analysis() FLOPs/bytes and
+the parsed collective bytes are per-chip quantities; dividing by per-chip
+peaks is algebraically the same as the brief's global/(chips*peak) form.
+
+collective_bytes is parsed from the optimized HLO text: we sum the *result*
+shape bytes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op (the data each chip moves over ICI per op, to within
+the usual 2(n-1)/n ring factor, which we fold into the reported term).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# matches e.g. "bf16[128,4096]" or "f32[]"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.startswith("%") or " = " in s:
+            for kind in _COLLECTIVES:
+                # match ` kind(` as the op being assigned on this line
+                if f" {kind}(" in s or f" {kind}-start(" in s:
+                    lhs = s.split(" = ", 1)
+                    if len(lhs) != 2:
+                        continue
+                    # result type(s) = everything before the op name
+                    rhs = lhs[1]
+                    idx = rhs.find(f" {kind}")
+                    type_str = rhs[:idx] if idx > 0 else rhs.split(" ")[0]
+                    for m in _SHAPE_RE.finditer(type_str):
+                        out[kind] += _shape_bytes(m.group(1), m.group(2))
+                    out["count"] += 1
+                    break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_chip / self.hbm_bw
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_chip / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self) -> float:
+        """Roofline step-time estimate = max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def asdict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "bottleneck": self.bottleneck,
+            "step_s": self.step_s,
+        }
+
+
+def model_flops(cfg, shape, n_tokens: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); decode: D=1 token/seq."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n * n_tokens
+    # inference fwd only ~ 2*N per token (+ attn, ignored in the ratio metric)
+    return 2.0 * n * n_tokens

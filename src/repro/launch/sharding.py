@@ -1,0 +1,198 @@
+"""Sharding rules: param/activation pytree -> PartitionSpec tree.
+
+Rules are name-based (pytree path substrings) with *divisibility-aware
+degradation*: an axis is only applied to a tensor dim whose size it divides;
+otherwise that dim falls back to replication.  This lets one rule table
+serve all 12 architectures (e.g. kv_heads=16 shards over `model`, kv_heads=8
+falls back to sequence sharding for the KV cache).
+
+Conventions (single-pod axes ("data", "model"); multi-pod prepends "pod"
+to the batch axes):
+  - 2D weights: row dim over one axis, col dim over the other ("2D sharded",
+    megatron x FSDP), chosen so matmul contraction dims match activations.
+  - MoE experts: expert dim over `model`, d_model dim over `data`.
+  - activations/batch: over ("pod","data"); KV cache heads or sequence over
+    `model`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def fit_spec(mesh: Mesh, shape: Tuple[int, ...], spec: P) -> P:
+    """Drop axes that don't divide their dim; trim/extend rank mismatches."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, axis in zip(shape, entries[: len(shape)]):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            out.append(axis)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+    return "/".join(parts)
+
+
+# Rule table: (substring, base_spec_for_last_ndims). First match wins.
+# Specs are written for the *trailing* dims; leading (stacked-block, expert
+# pool, etc.) dims are replicated automatically.
+#
+# mode="train": expert weights FSDP-shard their d_model/d_ff dims over `data`
+#   (gathered once per microbatch — amortized over ~1M tokens).
+# mode="decode": megatron column/row sharding inside each expert so weights
+#   never move at decode time; the only comm is a small activation psum.
+def param_rules(dp, mp, mode: str = "train"):
+    if mode == "decode":
+        return [
+            ("experts/wi", P(mp, None, dp)),  # (E, D, 2F): col-sharded
+            ("experts/wo", P(mp, dp, None)),  # (E, F, D): row-sharded
+        ] + _common_rules(dp, mp)
+    return [
+        ("experts/wi", P(mp, dp, None)),      # (E, D, 2F)
+        ("experts/wo", P(mp, None, dp)),      # (E, F, D)
+    ] + _common_rules(dp, mp)
+
+
+def _common_rules(dp, mp):
+    return [
+        ("router", P(dp, None)),              # (D, E)
+        ("embed", P(mp, dp)),                 # (V, D)
+        ("lm_head", P(dp, mp)),               # (D, V)
+        ("wq", P(dp, mp)),
+        ("wk", P(dp, mp)),
+        ("wv", P(dp, mp)),
+        ("wo", P(mp, dp)),
+        ("w_dkv", P(dp, None)),               # (D, R+rope): R small
+        ("w_uk", P(None, mp)),                # (R, H*dh)
+        ("w_uv", P(None, mp)),
+        ("ffn/wi", P(dp, mp)),                # dense FFN
+        ("ffn/wo", P(mp, dp)),
+        # shared experts: megatron col/row (model axis only). 2D-sharding
+        # them makes every weight-grad conflict with the token sharding and
+        # XLA all-gathers fp32 cotangents instead (-30% collective on llama4
+        # train from this one rule; shared weights are small enough that
+        # dp-replication costs ~10 MB/chip). See EXPERIMENTS.md §Perf it. 18.
+        ("shared/wi", P(None, mp)),
+        ("shared/wo", P(mp, None)),
+        ("in_proj", P(dp, mp)),               # ssm
+        ("out_proj", P(mp, dp)),
+        ("conv_w", P(None, mp)),
+        # everything else (norms, biases, A_log, scales): replicated
+    ]
+
+
+def spec_for_param(path_s: str, shape, mesh: Mesh, dp, mp, mode: str = "train") -> P:
+    # Expert-count fallback: when E doesn't divide the model axis (Mixtral's
+    # 8 experts on a 16-way axis) the model axis moves to the d_ff dim
+    # (megatron-style within each expert) instead of being dropped.
+    if "experts/wi" in path_s or "experts/wo" in path_s:
+        e = shape[-3]
+        if e % _axis_size(mesh, mp) != 0:
+            base = P(None, dp, mp) if "wi" in path_s else P(None, mp, dp)
+            lead = (None,) * (len(shape) - 3)
+            return fit_spec(mesh, shape, P(*lead, *base))
+    for needle, base in param_rules(dp, mp, mode):
+        if needle in path_s:
+            nd = len(base)
+            if len(shape) < nd:
+                return fit_spec(mesh, shape, P(*list(base)[-len(shape):]))
+            lead = (None,) * (len(shape) - nd)
+            return fit_spec(mesh, shape, P(*lead, *base))
+    return P()  # replicate
+
+
+def param_shardings(mesh: Mesh, param_shapes: Any, mode: str = "train") -> Any:
+    """ShapeDtypeStruct/array tree -> NamedSharding tree."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data")) or None
+    if dp is not None and len(dp) == 1:
+        dp = dp[0]
+    mp = "model"
+
+    def one(path, leaf):
+        spec = spec_for_param(_path_str(path), leaf.shape, mesh, dp, mp, mode)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)
+
+
+# ----------------------------------------------------------------------
+# activation / cache shardings
+# ----------------------------------------------------------------------
+
+def batch_spec(mesh: Mesh, batch: int, extra_dims: int = 1) -> P:
+    """(B, ...) activations: B over (pod, data) when divisible."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+    return fit_spec(mesh, (batch,) + (0,) * extra_dims, P(dp))
+
+
+def cache_shardings(mesh: Mesh, cache_shapes: Any, batch: int) -> Any:
+    """Decode-cache tree -> NamedSharding tree.
+
+    attention k/v (…, B, S, Hkv, hd): B over dp, Hkv over model when it
+    divides, else S over model.  MLA c_kv (…, B, S, R): S over model.
+    SSM h (…, B, H, P, N): H over model.  conv (…, B, K-1, C): C over model.
+    enc_kv (L, 2, B, S, Hkv, hd): B over dp only.
+    """
+    dp_t = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp_t if len(dp_t) > 1 else dp_t[0]
+    mp = "model"
+    all_ax = dp_t + (mp,)
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        shape = leaf.shape
+        nd = len(shape)
+        name = ps.rsplit("/", 1)[-1]
+        base: Optional[P] = None
+        if "enc_kv" in ps:
+            base = P(None, None, dp, None, None, None)
+        elif name in ("k", "v"):          # (B, S, Hkv, hd) [+lead]
+            b, s, hkv, hd = shape[-4:]
+            b_ok = b % _axis_size(mesh, dp) == 0
+            h_ok = hkv % _axis_size(mesh, mp) == 0
+            if b_ok:
+                base = P(dp, None, mp, None) if h_ok else P(dp, mp, None, None)
+            else:  # batch too small (long_500k): context-parallel the seq dim
+                base = P(None, dp, mp, None) if h_ok else P(None, all_ax, None, None)
+        elif name in ("c_kv", "k_rope"):   # (B, S, R)
+            b = shape[-3]
+            b_ok = b % _axis_size(mesh, dp) == 0
+            base = P(dp, mp, None) if b_ok else P(None, all_ax, None)
+        elif name == "h":                  # (B, H, P, N)
+            base = P(dp, mp, None, None)
+        elif name == "conv":               # (B, K-1, C)
+            base = P(dp, None, mp)
+        if base is None:
+            return NamedSharding(mesh, P())
+        lead = (None,) * (nd - len(base))
+        return NamedSharding(mesh, fit_spec(mesh, shape, P(*lead, *base)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh, tree: Any) -> Any:
+    return jax.tree_util.tree_map(lambda _: NamedSharding(mesh, P()), tree)

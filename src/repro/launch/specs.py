@@ -1,0 +1,173 @@
+"""input_specs: ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for every (architecture x input shape) dry-run target,
+plus the step function each shape lowers.
+
+  train_4k    -> train_step(TrainState, Batch)
+  prefill_32k -> prefill_step(params, Batch)
+  decode_32k  -> serve_step(params, cache, tokens, positions)
+  long_500k   -> serve_step with a 524288-token cache, batch 1
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.configs.base import InputShape
+from repro.launch import sharding as sh
+from repro.models.model import Batch, Model
+from repro.serving.decode import make_serve_step
+from repro.training.optimizer import OptimizerConfig, init_opt_state
+from repro.training.train_loop import TrainState, make_train_step
+
+
+def _sds(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int) -> Batch:
+    kw = {}
+    if cfg.frontend == "vision_patches":
+        kw["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.num_prefix_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio_frames":
+        kw["audio_frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder.seq_len, cfg.encoder.d_model), jnp.float32)
+    return Batch(
+        tokens=jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+        loss_mask=jax.ShapeDtypeStruct((batch, seq), jnp.float32),
+        **kw,
+    )
+
+
+def batch_shardings(mesh, b: Batch):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+
+    def one(leaf):
+        if leaf is None:
+            return None
+        spec = sh.fit_spec(mesh, leaf.shape, P(dp))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, b)
+
+
+def train_microbatches(cfg: ModelConfig, shape: InputShape, dp_size: int = 16) -> int:
+    """Microbatch count for gradient accumulation, sized so the per-chip
+    remat carry stack (layers x B_local x S x D x ~6 bytes incl. the fp32
+    shadow) stays within ~6 GB of the 16 GB v5e HBM."""
+    layers_ = cfg.num_layers
+    b_local = max(shape.global_batch // dp_size, 1)  # data(+pod)-axis shards
+    stack = layers_ * b_local * shape.seq_len * cfg.d_model * 6
+    mb = 1
+    # cap: each microbatch must still shard its batch over the full dp axis
+    mb_max = max(shape.global_batch // dp_size, 1)
+    while stack / mb > 6e9 and mb < mb_max:
+        mb *= 2
+    while shape.global_batch % mb:
+        mb //= 2
+    return max(mb, 1)
+
+
+def _quantized_init(model: Model, bits: int):
+    """init fn whose expert weights are groupwise-quantized QTensors —
+    the beyond-paper mixed-precision *resident* expert option (the HOBBIT
+    insight applied to the HBM tier instead of the PCIe tier)."""
+    from repro.quant.quantize import quantize
+
+    def init(key):
+        params = model.init(key)
+
+        def q(tree):
+            return {"wi": quantize(tree["wi"], bits=bits, group_size=128),
+                    "wo": quantize(tree["wo"], bits=bits, group_size=128)}
+
+        def walk(node):
+            if isinstance(node, dict):
+                return {k: (q(v) if k == "experts" else walk(v))
+                        for k, v in node.items()}
+            if isinstance(node, list):
+                return [walk(v) for v in node]
+            return node
+
+        return walk(params)
+
+    return init
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh) -> Tuple[Callable, tuple, tuple, tuple]:
+    """Returns (step_fn, arg_structs, in_shardings, donate_argnums)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    shape: InputShape = INPUT_SHAPES[shape_name]
+    model = Model(cfg)
+    repl = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        # bf16 Adam moments for >50B-param models (fp32 states alone would
+        # exceed 16 GB/chip at 236B/256 chips)
+        big = cfg.param_count() > 50e9
+        ocfg = OptimizerConfig(total_steps=10_000,
+                               moment_dtype="bfloat16" if big else "float32")
+        # Gradient accumulation bounds the remat-residual stack (and the
+        # fp32 shadow XLA hoists out of the backward loop) to one microbatch.
+        import numpy as _np
+        dp_size = int(_np.prod([mesh.shape[a] for a in mesh.axis_names
+                                if a in ("pod", "data")]))
+        mb = train_microbatches(cfg, shape, dp_size)
+        step_fn = make_train_step(model, ocfg, remat=True, microbatches=mb)
+        p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_shard = sh.param_shardings(mesh, p_shapes)
+        opt_shapes = jax.eval_shape(
+            lambda p: init_opt_state(p, ocfg.moment_dtype), p_shapes)
+        opt_shard = dataclasses.replace  # noqa (documentation)
+        from repro.training.optimizer import OptState
+        opt_sh = OptState(step=repl,
+                          mu=sh.param_shardings(mesh, opt_shapes.mu),
+                          nu=sh.param_shardings(mesh, opt_shapes.nu))
+        state = TrainState(p_shapes, opt_shapes)
+        state_sh = TrainState(p_shard, opt_sh)
+        b = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        b_sh = batch_shardings(mesh, b)
+        return step_fn, (state, b), (state_sh, b_sh), (0,)
+
+    if shape.kind == "prefill":
+        # VLM prompts carry num_prefix_tokens patch embeddings on top of the
+        # text tokens; the cache must hold both
+        plen = shape.seq_len + (cfg.num_prefix_tokens
+                                if cfg.frontend == "vision_patches" else 0)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, plen)
+        p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        p_shard = sh.param_shardings(mesh, p_shapes)
+        b = batch_struct(cfg, shape.global_batch, shape.seq_len)
+        b_sh = batch_shardings(mesh, b)
+        return prefill_step, (p_shapes, b), (p_shard, b_sh), ()
+
+    # decode
+    step_fn = make_serve_step(model)
+    init_fn = model.init
+    if cfg.moe is not None and cfg.moe.expert_precision in ("int8", "int4"):
+        init_fn = _quantized_init(model, int(cfg.moe.expert_precision[3:]))
+    p_shapes = jax.eval_shape(init_fn, jax.random.PRNGKey(0))
+    p_shard = sh.param_shardings(mesh, p_shapes, mode="decode")
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cache_sh = sh.cache_shardings(mesh, cache_shapes, shape.global_batch)
+    toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp if len(dp) > 1 else dp[0]
+    tok_sh = NamedSharding(mesh, sh.fit_spec(mesh, toks.shape, P(dp)))
+    pos_sh = NamedSharding(mesh, sh.fit_spec(mesh, pos.shape, P(dp)))
+    return (step_fn, (p_shapes, cache_shapes, toks, pos),
+            (p_shard, cache_sh, tok_sh, pos_sh), (1,))

@@ -1,0 +1,70 @@
+"""Training launcher.
+
+Single-host (CPU) demo scale:
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b --smoke \
+      --steps 200 --batch 8 --seq 64
+
+Production mesh dry-run of the same step function is `repro.launch.dryrun`;
+on a real TPU pod this launcher jits with the identical sharding rules.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+import jax
+
+from repro.configs import get_config, smoke_variant
+from repro.data.pipeline import DataConfig, batches, eval_batches
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import OptimizerConfig
+from repro.training.train_loop import init_state, make_eval_step, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--ckpt-dir", type=str, default=None)
+    ap.add_argument("--eval-every", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg, vocab=args.vocab)
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    model = build_model(cfg)
+    print(f"arch={cfg.name} params={cfg.param_count()/1e6:.1f}M "
+          f"active={cfg.active_param_count()/1e6:.1f}M")
+
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
+                    batch_size=args.batch)
+    it = batches(dc)
+    ocfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps)
+    eval_fn = None
+    if args.eval_every:
+        ev = eval_batches(dc, 2)
+        es = jax.jit(make_eval_step(model))
+
+        def eval_fn(params):
+            return sum(float(es(params, b)) for b in ev) / len(ev)
+
+    state, hist = train(model, ocfg, it, args.steps,
+                        log_every=max(args.steps // 10, 1), eval_fn=eval_fn)
+    if args.ckpt_dir:
+        path = ckpt.save(args.ckpt_dir, state.params, step=args.steps)
+        print(f"checkpoint: {path}")
+    print(json.dumps(hist[-1]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.model import Batch, Model, build_model, unstack_layers
+
+__all__ = ["Batch", "Model", "build_model", "unstack_layers"]

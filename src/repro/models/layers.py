@@ -1,0 +1,480 @@
+"""Layer library: norms, RoPE, attention variants (GQA / sliding-window /
+chunked / MLA / softcap), FFN variants.  Pure functions over param dicts.
+
+Conventions:
+  activations  (B, S, D), compute dtype = cfg dtype (bf16), fp32 reductions
+  attention    q/k/v as (B, S, H, hd); GQA without materializing repeats
+  decode       S=1 query against a (B, Smax, ...) cache + a (B,) position vec
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.kernels import ops as kops
+from repro.models import shard_utils
+from repro.quant.quantize import QTensor
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * (1.0 + p["scale"]) + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps)
+        y = y * (1.0 + p["scale"])
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps):
+    """qk-norm over the head dim (gemma3)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(ms + eps)) * (1.0 + scale)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    if theta <= 0:
+        return x
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int):
+    pos = np.arange(max_len)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / d)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# masks
+# --------------------------------------------------------------------------
+
+def make_mask(q_pos, k_pos, kind: str, window: int):
+    """Boolean (..., Sq, Sk) mask: True = attendable.  q_pos/k_pos: int32 arrays
+    broadcastable to (..., Sq) / (..., Sk)."""
+    dq = q_pos[..., :, None]
+    dk = k_pos[..., None, :]
+    causal = dk <= dq
+    if kind == "attn":
+        return causal
+    if kind == "attn_local":
+        return causal & (dq - dk < window)
+    if kind == "attn_chunked":
+        return causal & (dq // window == dk // window)
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# core attention math
+# --------------------------------------------------------------------------
+
+def _softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x
+
+
+def _score_spec(b: int, hkv: int, sq: int, sk: int):
+    """Sharding cascade for the (B, Hkv, g, Sq, Sk) score tensor: prefer
+    kv-head sharding; fall back to query-dim, then key-dim (context
+    parallel — XLA psums the softmax statistics) when heads don't divide
+    the model axis (e.g. 40 q-heads / 6 whisper heads on a 16-way axis).
+    When the batch itself can't shard (long_500k's B=1), the key dim takes
+    every mesh axis to match the context-parallel KV cache layout."""
+    mdl = shard_utils.axis_size("model")
+    dp = shard_utils.dp_size()
+    if mdl * dp <= 1:
+        return (None,) * 5
+    if b % max(dp, 1) != 0:
+        if sk % (dp * mdl) == 0:
+            return (None, None, None, None, "all")
+        if sk % mdl == 0:
+            return (None, None, None, None, "model")
+        return (None,) * 5
+    if hkv % mdl == 0:
+        return ("batch", "model", None, None, None)
+    if sq % mdl == 0:
+        return ("batch", None, None, "model", None)
+    if sk % mdl == 0:
+        return ("batch", None, None, None, "model")
+    return ("batch", None, None, None, None)
+
+
+def mha(q, k, v, mask, softcap: float, scale: float):
+    """q: (B,Sq,Hq,hd) k/v: (B,Sk,Hkv,hd); GQA grouped einsum, fp32 softmax."""
+    b, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = shard_utils.constrain(logits, *_score_spec(b, hkv, sq, k.shape[1]))
+    logits = _softcap(logits, softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, hd).astype(q.dtype)
+
+
+def chunked_mha(q, k, v, q_pos, k_pos, kind, window, softcap, scale,
+                q_chunk: int = 1024):
+    """Query-chunked attention: bounds the live score tensor to (qc, Sk).
+    Used for long prefill/train sequences; numerically identical to mha."""
+    b, sq, hq, hd = q.shape
+    if sq <= q_chunk:
+        mask = make_mask(q_pos, k_pos, kind, window)
+        return mha(q, k, v, mask, softcap, scale)
+    nc, rem = divmod(sq, q_chunk)
+    main = nc * q_chunk
+
+    def body(carry, xs):
+        qc, qpc = xs  # (b, qc, hq, hd), (b, qc)
+        mask = make_mask(qpc, k_pos, kind, window)
+        return carry, mha(qc, k, v, mask, softcap, scale)
+
+    qs = q[:, :main].reshape(b, nc, q_chunk, hq, hd).transpose(1, 0, 2, 3, 4)
+    qps = q_pos[:, :main].reshape(b, nc, q_chunk).transpose(1, 0, 2)
+    _, outs = jax.lax.scan(body, None, (qs, qps))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, main, hq, hd)
+    if rem:  # tail queries (e.g. a vision-prefix remainder)
+        mask = make_mask(q_pos[:, main:], k_pos, kind, window)
+        tail = mha(q[:, main:], k, v, mask, softcap, scale)
+        out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# GQA attention layer (full-seq + decode)
+# --------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = split_keys(key, 4)
+    kv_d = cfg.encoder.d_model if (cross and cfg.encoder) else d
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), _dt(cfg)),
+        "wk": dense_init(ks[1], (kv_d, hkv * hd), _dt(cfg)),
+        "wv": dense_init(ks[2], (kv_d, hkv * hd), _dt(cfg)),
+        "wo": dense_init(ks[3], (hq * hd, d), _dt(cfg)),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((hd,), jnp.float32)
+        p["k_norm"] = jnp.zeros((hd,), jnp.float32)
+    return p
+
+
+def _dt(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def attn_forward(p, x, positions, cfg: ModelConfig, kind: str,
+                 use_rope: bool = True):
+    """Full-sequence self attention (train / prefill). Returns (out, (k, v))."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # cache stores unexpanded GQA heads, sharded to match cache_shardings
+    # (heads over model when divisible, else sequence over model)
+    mdl = shard_utils.axis_size("model")
+    kv_head_ax = "model" if hkv % max(mdl, 1) == 0 else None
+    kv_seq_ax = None if kv_head_ax else "model"
+    kv_out = (shard_utils.constrain(k, "batch", kv_seq_ax, kv_head_ax, None),
+              shard_utils.constrain(v, "batch", kv_seq_ax, kv_head_ax, None))
+    # Tensor-parallel layout: if the kv heads don't divide the model axis but
+    # the q heads do, expand kv to q heads so attention shards cleanly
+    # (standard TP practice; kv tensors are small relative to scores).
+    if mdl > 1 and hkv % mdl != 0 and hq % mdl == 0:
+        g = hq // hkv
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    hkv_eff = k.shape[2]
+    h_ok = hkv_eff % max(mdl, 1) == 0
+    q = shard_utils.constrain(q, "batch", None, "model" if hq % max(mdl, 1) == 0 else None, None)
+    k = shard_utils.constrain(k, "batch", None if h_ok else "model",
+                              "model" if h_ok else None, None)
+    v = shard_utils.constrain(v, "batch", None if h_ok else "model",
+                              "model" if h_ok else None, None)
+    scale = 1.0 / np.sqrt(hd)
+    out = chunked_mha(q, k, v, positions, positions, kind, cfg.window_size,
+                      cfg.attn_logit_softcap, scale)
+    out = shard_utils.constrain(out, "batch", None,
+                                "model" if hq % max(mdl, 1) == 0 else None, None)
+    return out.reshape(b, s, hq * hd) @ p["wo"], kv_out
+
+
+def attn_decode(p, x, kv_cache, positions, cfg: ModelConfig, kind: str,
+                use_rope: bool = True):
+    """One-token decode.  x: (B,1,D); kv_cache: dict(k=(B,Smax,Hkv,hd), v=...).
+    positions: (B,) current write index.  Returns (out, new_cache).
+
+    Sliding-window / chunked layers use a RING cache of `window` slots
+    (production KV sizing: a 1024-window gemma3 layer never needs a 32k
+    cache); slot = pos % Smax, and the absolute position of slot j is
+    recovered as pos - ((pos - j) mod Smax)."""
+    b, s1, d = x.shape
+    assert s1 == 1
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, 1, hq, hd)
+    k = (x @ p["wk"]).reshape(b, 1, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if use_rope and cfg.rope_theta > 0:
+        q = apply_rope(q, positions[:, None], cfg.rope_theta)
+        k = apply_rope(k, positions[:, None], cfg.rope_theta)
+    smax = kv_cache["k"].shape[1]
+    ring = kind != "attn" and smax <= cfg.window_size
+    slots = positions % smax if ring else positions
+    ck = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        kv_cache["k"], k, slots)
+    cv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0, 0)))(
+        kv_cache["v"], v, slots)
+    idx = jnp.arange(smax, dtype=jnp.int32)[None, :]
+    if ring:
+        k_pos = positions[:, None] - ((positions[:, None] - idx) % smax)
+        valid = (k_pos >= 0)[:, None, :]          # (B, 1, Smax)
+    else:
+        k_pos = idx
+        valid = jnp.ones((1, 1, smax), bool)
+    mask = make_mask(positions[:, None], k_pos, kind, cfg.window_size) & valid
+    scale = 1.0 / np.sqrt(hd)
+    out = mha(q, ck, cv, mask, cfg.attn_logit_softcap, scale)
+    return out.reshape(b, 1, hq * hd) @ p["wo"], {"k": ck, "v": cv}
+
+
+def cross_attn_forward(p, x, enc_kv, cfg: ModelConfig):
+    """Cross attention into precomputed encoder K/V (whisper decoder)."""
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k, v = enc_kv  # (B, Senc, Hkv, hd)
+    mask = jnp.ones((b, s, k.shape[1]), bool)
+    out = mha(q, k, v, mask, 0.0, 1.0 / np.sqrt(hd))
+    return out.reshape(b, s, hq * hd) @ p["wo"]
+
+
+# --------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# --------------------------------------------------------------------------
+
+def mla_init(key, cfg: ModelConfig):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    ks = split_keys(key, 5)
+    return {
+        "wq": dense_init(ks[0], (d, h * (m.nope_head_dim + m.rope_head_dim)), _dt(cfg)),
+        "w_dkv": dense_init(ks[1], (d, m.kv_lora_rank + m.rope_head_dim), _dt(cfg)),
+        "w_uk": dense_init(ks[2], (m.kv_lora_rank, h * m.nope_head_dim), _dt(cfg)),
+        "w_uv": dense_init(ks[3], (m.kv_lora_rank, h * m.v_head_dim), _dt(cfg)),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), _dt(cfg)),
+        "kv_norm": jnp.zeros((m.kv_lora_rank,), jnp.float32),
+    }
+
+
+def _mla_split_q(p, x, cfg):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = (x @ p["wq"]).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    return q[..., : m.nope_head_dim], q[..., m.nope_head_dim:]
+
+
+def _mla_compress_kv(p, x, positions, cfg):
+    """Returns (c_kv normalized (B,S,R), k_rope (B,S,1,rope_hd))."""
+    m = cfg.mla
+    dkv = x @ p["w_dkv"]                                   # (B,S,R+rope)
+    c_kv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank:]
+    # rmsnorm on the latent (deepseek applies a norm before up-projection)
+    cf = c_kv.astype(jnp.float32)
+    cf = cf * jax.lax.rsqrt(jnp.mean(jnp.square(cf), -1, keepdims=True) + cfg.norm_eps)
+    c_kv = (cf * (1.0 + p["kv_norm"])).astype(x.dtype)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def mla_forward(p, x, positions, cfg: ModelConfig, q_chunk: int = 1024):
+    """Full-seq MLA (train/prefill): up-project latent to K/V per head,
+    query-chunked so the live score tensor is bounded to (qc, S).
+    Returns (out, (c_kv, k_rope)) — the compressed cache."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_split_q(p, x, cfg)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv, k_rope = _mla_compress_kv(p, x, positions, cfg)
+    k_nope = (c_kv @ p["w_uk"]).reshape(b, s, h, m.nope_head_dim)
+    v = (c_kv @ p["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    mdl = shard_utils.axis_size("model")
+    head_ax = "model" if h % max(mdl, 1) == 0 else None
+    q_nope = shard_utils.constrain(q_nope, "batch", None, head_ax, None)
+    k_nope = shard_utils.constrain(k_nope, "batch", None, head_ax, None)
+    v = shard_utils.constrain(v, "batch", None, head_ax, None)
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    k_rope_f = k_rope[:, :, 0].astype(jnp.float32)
+
+    def attend(qn, qr, qpos):
+        logits = (jnp.einsum("bqhd,bkhd->bhqk", qn.astype(jnp.float32),
+                             k_nope.astype(jnp.float32))
+                  + jnp.einsum("bqhd,bkd->bhqk", qr.astype(jnp.float32),
+                               k_rope_f)) * scale
+        logits = shard_utils.constrain(logits, "batch", head_ax, None, None)
+        mask = make_mask(qpos, positions, "attn", 0)
+        logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", w, v.astype(jnp.float32)).astype(x.dtype)
+
+    if s <= q_chunk:
+        out = attend(q_nope, q_rope, positions)
+    else:
+        nc, rem = divmod(s, q_chunk)
+        main = nc * q_chunk
+
+        def body(_, xs):
+            qn, qr, qp = xs
+            return None, attend(qn, qr, qp)
+
+        qns = q_nope[:, :main].reshape(b, nc, q_chunk, h, -1).transpose(1, 0, 2, 3, 4)
+        qrs = q_rope[:, :main].reshape(b, nc, q_chunk, h, -1).transpose(1, 0, 2, 3, 4)
+        qps = positions[:, :main].reshape(b, nc, q_chunk).transpose(1, 0, 2)
+        _, outs = jax.lax.scan(body, None, (qns, qrs, qps))
+        out = outs.transpose(1, 0, 2, 3, 4).reshape(b, main, h, m.v_head_dim)
+        if rem:
+            tail = attend(q_nope[:, main:], q_rope[:, main:], positions[:, main:])
+            out = jnp.concatenate([out, tail], axis=1)
+    out = out.reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    mdl_seq_ax = "model"
+    c_kv = shard_utils.constrain(c_kv, "batch", mdl_seq_ax, None)
+    k_rope_out = shard_utils.constrain(k_rope[:, :, 0, :], "batch", mdl_seq_ax, None)
+    return out, (c_kv, k_rope_out)
+
+
+def mla_decode(p, x, cache, positions, cfg: ModelConfig):
+    """Absorbed-matrix MLA decode: attend directly in the R-dim latent space.
+    cache: dict(c_kv=(B,Smax,R), k_rope=(B,Smax,rope_hd))."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    q_nope, q_rope = _mla_split_q(p, x, cfg)               # (B,1,H,*)
+    q_rope = apply_rope(q_rope, positions[:, None], cfg.rope_theta)
+    c_new, k_rope_new = _mla_compress_kv(p, x, positions[:, None], cfg)
+    c_kv = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+        cache["c_kv"], c_new, positions)
+    k_rope = jax.vmap(lambda c, u, i: jax.lax.dynamic_update_slice(c, u, (i, 0)))(
+        cache["k_rope"], k_rope_new[:, :, 0, :], positions)
+    # absorb W_uk into q: q_lat (B,1,H,R)
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.nope_head_dim)
+    q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = 1.0 / np.sqrt(m.nope_head_dim + m.rope_head_dim)
+    logits = (jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv.astype(jnp.float32))
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))) * scale
+    smax = c_kv.shape[1]
+    mask = (jnp.arange(smax, dtype=jnp.int32)[None, :] <= positions[:, None])
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    o_lat = jnp.einsum("bhqk,bkr->bqhr", w, c_kv.astype(jnp.float32))  # (B,1,H,R)
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bqhr,rhd->bqhd", o_lat, w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = out.reshape(b, 1, h * m.v_head_dim) @ p["wo"]
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# --------------------------------------------------------------------------
+# FFN variants (dense path; MoE lives in moe.py)
+# --------------------------------------------------------------------------
+
+def ffn_init(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    k1, k2 = jax.random.split(key)
+    if cfg.ffn_activation == "swiglu":
+        wi = dense_init(k1, (d, 2 * f), _dt(cfg))
+    else:
+        wi = dense_init(k1, (d, f), _dt(cfg))
+    return {"wi": wi, "wo": dense_init(k2, (f, d), _dt(cfg))}
+
+
+def _matmul(x, w, mode="auto"):
+    if isinstance(w, QTensor):
+        return kops.dequant_matmul(x, w, mode=mode).astype(x.dtype)
+    return x @ w
+
+
+def ffn_forward(p, x, cfg: ModelConfig):
+    h = _matmul(x, p["wi"])
+    h = shard_utils.constrain(h, *(("batch",) + (None,) * (h.ndim - 2) + ("model",)))
+    if cfg.ffn_activation == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif cfg.ffn_activation == "sq_relu":
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(x.dtype)
+    else:  # gelu
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return _matmul(h, p["wo"])

@@ -1,0 +1,587 @@
+"""Model assembly: config -> init / forward / loss / prefill / decode_step.
+
+The layer stack is organized as (unrolled prefix) + (lax.scan over stacked
+repeating blocks) + (unrolled tail); see configs.base.  All functions are pure
+and jit/pjit-friendly; the HOBBIT offload engine uses `unstack_layers` to get
+a flat per-layer view for its host-driven decode loop.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, moe as moe_lib, shard_utils, ssm as ssm_lib
+
+
+class Batch(NamedTuple):
+    tokens: jax.Array                     # (B, S) int32
+    loss_mask: jax.Array                  # (B, S) f32 (1 = predict this target)
+    prefix_embeds: Optional[jax.Array] = None   # (B, P, D) vlm patch embeds
+    audio_frames: Optional[jax.Array] = None    # (B, F, D_enc) whisper frames
+
+
+# --------------------------------------------------------------------------
+# per-layer init / apply
+# --------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, kind: str, is_moe: bool, cross: bool):
+    ks = layers.split_keys(key, 4)
+    p: Dict[str, Any] = {"pre_norm": layers.norm_init(cfg)}
+    if kind.startswith("attn"):
+        if cfg.mla is not None:
+            p["attn"] = layers.mla_init(ks[0], cfg)
+        else:
+            p["attn"] = layers.attn_init(ks[0], cfg)
+    elif kind == "ssm":
+        p["mixer"] = ssm_lib.ssm_init(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = layers.norm_init(cfg)
+        p["cross"] = layers.attn_init(ks[3], cfg, cross=True)
+    # mixer-only layers (mamba2 arch has no FFN)
+    if cfg.d_ff > 0 or is_moe:
+        p["ffn_norm"] = layers.norm_init(cfg)
+        p["ffn"] = moe_lib.moe_init(ks[1], cfg) if is_moe else layers.ffn_init(ks[1], cfg)
+    if cfg.sandwich_norm:
+        p["post_norm"] = layers.norm_init(cfg)
+        if "ffn" in p:
+            p["post_ffn_norm"] = layers.norm_init(cfg)
+    return p
+
+
+def _use_rope(cfg: ModelConfig, kind: str) -> bool:
+    if cfg.family == "hybrid":
+        return False      # jamba attention layers use no positional encoding
+    return cfg.rope_theta > 0
+
+
+def _layer_forward(p, x, positions, cfg: ModelConfig, kind: str, is_moe: bool,
+                   enc_kv=None):
+    """Full-sequence layer. Returns (x, aux_loss, cache_entry)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = layers.apply_norm(p["pre_norm"], x, cfg)
+    if kind.startswith("attn"):
+        if cfg.mla is not None:
+            out, kv = layers.mla_forward(p["attn"], h, positions, cfg)
+            cache = {"c_kv": kv[0], "k_rope": kv[1]}
+        else:
+            out, kv = layers.attn_forward(p["attn"], h, positions, cfg, kind,
+                                          use_rope=_use_rope(cfg, kind))
+            cache = {"k": kv[0], "v": kv[1]}
+    else:
+        out, state = ssm_lib.ssm_forward(p["mixer"], h, cfg)
+        cache = state
+    if cfg.sandwich_norm:
+        out = layers.apply_norm(p["post_norm"], out, cfg)
+    x = x + out
+
+    if enc_kv is not None and "cross" in p:
+        h = layers.apply_norm(p["cross_norm"], x, cfg)
+        x = x + layers.cross_attn_forward(p["cross"], h, enc_kv, cfg)
+
+    if "ffn" in p:
+        h = layers.apply_norm(p["ffn_norm"], x, cfg)
+        if is_moe:
+            y, aux, _ = moe_lib.moe_forward(p["ffn"], h, cfg)
+        else:
+            y = layers.ffn_forward(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            y = layers.apply_norm(p["post_ffn_norm"], y, cfg)
+        x = x + y
+    return x, aux, cache
+
+
+def _layer_decode(p, x, cache, positions, cfg: ModelConfig, kind: str,
+                  is_moe: bool, enc_kv=None):
+    """One-token layer step. Returns (x, new_cache)."""
+    h = layers.apply_norm(p["pre_norm"], x, cfg)
+    if kind.startswith("attn"):
+        if cfg.mla is not None:
+            out, new_cache = layers.mla_decode(p["attn"], h, cache, positions, cfg)
+        else:
+            out, new_cache = layers.attn_decode(p["attn"], h, cache, positions, cfg,
+                                                kind, use_rope=_use_rope(cfg, kind))
+    else:
+        out, new_cache = ssm_lib.ssm_decode(p["mixer"], h, cache, cfg)
+    if cfg.sandwich_norm:
+        out = layers.apply_norm(p["post_norm"], out, cfg)
+    x = x + out
+
+    if enc_kv is not None and "cross" in p:
+        h = layers.apply_norm(p["cross_norm"], x, cfg)
+        x = x + layers.cross_attn_forward(p["cross"], h, enc_kv, cfg)
+
+    if "ffn" in p:
+        h = layers.apply_norm(p["ffn_norm"], x, cfg)
+        if is_moe:
+            y, _, _ = moe_lib.moe_forward(p["ffn"], h, cfg)
+        else:
+            y = layers.ffn_forward(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            y = layers.apply_norm(p["post_ffn_norm"], y, cfg)
+        x = x + y
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# whisper encoder
+# --------------------------------------------------------------------------
+
+def _encoder_init(key, cfg: ModelConfig):
+    e = cfg.encoder
+    ks = layers.split_keys(key, e.num_layers + 1)
+    lyrs = []
+    for i in range(e.num_layers):
+        k1, k2 = jax.random.split(ks[i])
+        lyrs.append({
+            "norm1": {"scale": jnp.zeros((e.d_model,), jnp.float32),
+                      "bias": jnp.zeros((e.d_model,), jnp.float32)},
+            "attn": {
+                "wq": layers.dense_init(k1, (e.d_model, e.d_model), layers._dt(cfg)),
+                "wk": layers.dense_init(jax.random.fold_in(k1, 1), (e.d_model, e.d_model), layers._dt(cfg)),
+                "wv": layers.dense_init(jax.random.fold_in(k1, 2), (e.d_model, e.d_model), layers._dt(cfg)),
+                "wo": layers.dense_init(jax.random.fold_in(k1, 3), (e.d_model, e.d_model), layers._dt(cfg)),
+            },
+            "norm2": {"scale": jnp.zeros((e.d_model,), jnp.float32),
+                      "bias": jnp.zeros((e.d_model,), jnp.float32)},
+            "ffn": {"wi": layers.dense_init(k2, (e.d_model, e.d_ff), layers._dt(cfg)),
+                    "wo": layers.dense_init(jax.random.fold_in(k2, 1), (e.d_ff, e.d_model), layers._dt(cfg))},
+        })
+    return {"layers": lyrs,
+            "final_norm": {"scale": jnp.zeros((e.d_model,), jnp.float32),
+                           "bias": jnp.zeros((e.d_model,), jnp.float32)}}
+
+
+def _ln(p, x, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)) * (1.0 + p["scale"]) + p["bias"]).astype(x.dtype)
+
+
+def _encoder_forward(p, frames, cfg: ModelConfig):
+    """frames: (B, F, d_enc) post-conv (stub) -> encoder states (B, F, d_enc)."""
+    e = cfg.encoder
+    x = frames.astype(layers._dt(cfg))
+    x = x + layers.sinusoidal_positions(x.shape[1], e.d_model)[None].astype(x.dtype)
+    hd = e.d_model // e.num_heads
+    for lp in p["layers"]:
+        h = _ln(lp["norm1"], x, cfg.norm_eps)
+        b, f, _ = h.shape
+        q = (h @ lp["attn"]["wq"]).reshape(b, f, e.num_heads, hd)
+        k = (h @ lp["attn"]["wk"]).reshape(b, f, e.num_heads, hd)
+        v = (h @ lp["attn"]["wv"]).reshape(b, f, e.num_heads, hd)
+        mask = jnp.ones((b, f, f), bool)  # bidirectional
+        o = layers.mha(q, k, v, mask, 0.0, 1.0 / np.sqrt(hd))
+        x = x + o.reshape(b, f, e.d_model) @ lp["attn"]["wo"]
+        h = _ln(lp["norm2"], x, cfg.norm_eps)
+        h = jax.nn.gelu((h @ lp["ffn"]["wi"]).astype(jnp.float32)).astype(x.dtype)
+        x = x + h @ lp["ffn"]["wo"]
+    return _ln(p["final_norm"], x, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# the model
+# --------------------------------------------------------------------------
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg.validate()
+        self.has_cross = cfg.encoder is not None
+        # Megatron-style padded vocab: keeps the vocab dim divisible by the
+        # model axis so logits stay vocab-sharded (pad columns are masked).
+        self.v_pad = -(-cfg.vocab_size // 256) * 256
+
+    # -------------------- init --------------------
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        keys = layers.split_keys(key, 8)
+        params: Dict[str, Any] = {
+            "embed": layers.dense_init(keys[0], (self.v_pad, cfg.d_model),
+                                       layers._dt(cfg), scale=0.02),
+            "final_norm": layers.norm_init(cfg),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.dense_init(keys[1], (cfg.d_model, self.v_pad),
+                                                  layers._dt(cfg))
+        kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+        np_, nb, per = len(cfg.prefix_pattern), cfg.num_blocks, cfg.period
+
+        params["prefix"] = [
+            _layer_init(jax.random.fold_in(keys[2], i), cfg, kinds[i], moes[i], self.has_cross)
+            for i in range(np_)]
+
+        def one_block(k):
+            return [_layer_init(jax.random.fold_in(k, j), cfg,
+                                cfg.block_pattern[j], cfg.moe_pattern[j], self.has_cross)
+                    for j in range(per)]
+
+        blocks = [one_block(jax.random.fold_in(keys[3], i)) for i in range(nb)]
+        params["blocks"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+
+        params["tail"] = [
+            _layer_init(jax.random.fold_in(keys[4], i), cfg,
+                        cfg.tail_pattern[i], cfg.tail_moe[i], self.has_cross)
+            for i in range(len(cfg.tail_pattern))]
+
+        if cfg.encoder is not None:
+            params["encoder"] = _encoder_init(keys[5], cfg)
+            # project encoder states into decoder K/V space is handled by the
+            # per-layer cross wk/wv (sized d_enc -> kv heads) in _layer_init.
+        return params
+
+    # -------------------- embedding / logits --------------------
+    def _embed(self, params, batch: Batch):
+        cfg = self.cfg
+        x = jnp.take(params["embed"], batch.tokens, axis=0)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        offset = 0
+        if cfg.frontend == "vision_patches" and batch.prefix_embeds is not None:
+            x = jnp.concatenate([batch.prefix_embeds.astype(x.dtype), x], axis=1)
+            offset = batch.prefix_embeds.shape[1]
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        if cfg.rope_theta <= 0:  # learned/sinusoidal absolute positions (whisper)
+            x = x + layers.sinusoidal_positions(s, cfg.d_model)[None].astype(x.dtype)
+        x = shard_utils.constrain(x, "batch", None, None)
+        return x, positions, offset
+
+    def logits(self, params, x, *, keep_pad: bool = False):
+        cfg = self.cfg
+        h = layers.apply_norm(params["final_norm"], x, cfg)
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        lg = h.astype(jnp.float32) @ w.astype(jnp.float32)
+        lg = layers._softcap(lg, cfg.final_logit_softcap)
+        if self.v_pad != cfg.vocab_size:
+            mask = jnp.arange(self.v_pad) < cfg.vocab_size
+            lg = jnp.where(mask, lg, layers.NEG_INF)
+            if not keep_pad:
+                lg = lg[..., : cfg.vocab_size]
+        return lg
+
+    # -------------------- full-sequence forward --------------------
+    def forward(self, params, batch: Batch, *, remat: bool = False,
+                return_cache: bool = False):
+        """Returns (hidden (B,Stot,D), aux_loss, cache_or_None).
+
+        When return_cache=False the per-layer KV caches are not emitted from
+        the scan at all (they would otherwise be stacked into (num_blocks,...)
+        buffers that survive DCE through the remat boundary)."""
+        cfg = self.cfg
+        x, positions, offset = self._embed(params, batch)
+        enc_kv = None
+        if self.has_cross:
+            enc_states = _encoder_forward(params["encoder"], batch.audio_frames, cfg)
+            enc_kv = enc_states  # per-layer projection below
+
+        aux_total = jnp.zeros((), jnp.float32)
+        caches = {"prefix": [], "tail": []}
+
+        def run_layer(p, x, kind, is_moe):
+            ekv = None
+            if enc_kv is not None and "cross" in p:
+                b, f, _ = enc_kv.shape
+                hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+                k = (enc_kv @ p["cross"]["wk"]).reshape(b, f, hkv, hd)
+                v = (enc_kv @ p["cross"]["wv"]).reshape(b, f, hkv, hd)
+                ekv = (k, v)
+            return _layer_forward(p, x, positions, cfg, kind, is_moe, enc_kv=ekv)
+
+        kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+        li = 0
+        for p in params["prefix"]:
+            x, aux, c = run_layer(p, x, kinds[li], moes[li])
+            aux_total += aux
+            caches["prefix"].append(c)
+            li += 1
+
+        per = cfg.period
+
+        def block_fn(carry, bp):
+            x, aux_total = carry
+            cs = []
+            for j in range(per):
+                x, aux, c = run_layer(bp[j], x, cfg.block_pattern[j], cfg.moe_pattern[j])
+                aux_total += aux
+                cs.append(c)
+            # NOTE: sequence-parallel sharding of the carry was tried here
+            # and reverted: XLA re-gathers the saved residual stack in the
+            # backward scan (9 TB of all-gather for DeepSeek), negating the
+            # memory win.  See EXPERIMENTS.md §Perf.
+            return (x, aux_total), (cs if return_cache else None)
+
+        if remat:
+            block_fn = jax.checkpoint(block_fn, prevent_cse=False)
+        (x, aux_total), block_caches = jax.lax.scan(block_fn, (x, aux_total),
+                                                    params["blocks"])
+        caches["blocks"] = block_caches
+        li += cfg.num_blocks * per
+
+        for p in params["tail"]:
+            x, aux, c = run_layer(p, x, kinds[li], moes[li])
+            aux_total += aux
+            caches["tail"].append(c)
+            li += 1
+
+        if return_cache:
+            return x, aux_total, (caches, enc_kv, offset)
+        return x, aux_total, None
+
+    # -------------------- loss --------------------
+    def loss(self, params, batch: Batch, *, remat: bool = True,
+             xent_chunk: int = 65536):
+        """Next-token xent (chunked over tokens to bound logits memory)."""
+        cfg = self.cfg
+        x, aux, _ = self.forward(params, batch, remat=remat)
+        if cfg.frontend == "vision_patches" and batch.prefix_embeds is not None:
+            x = x[:, batch.prefix_embeds.shape[1]:, :]
+        b, s, d = x.shape
+        # predict token t+1 from position t
+        h = x[:, :-1, :].reshape(-1, d)
+        y = batch.tokens[:, 1:].reshape(-1)
+        m = batch.loss_mask[:, 1:].reshape(-1).astype(jnp.float32)
+        t = h.shape[0]
+        w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+        chunk = min(xent_chunk, t)
+        while t % chunk:
+            chunk -= 1
+
+        vpad_mask = (jnp.arange(self.v_pad) < cfg.vocab_size
+                     ) if self.v_pad != cfg.vocab_size else None
+
+        def xent_block(args):
+            hc, yc, mc = args
+            lg = hc.astype(jnp.float32) @ w.astype(jnp.float32)
+            lg = shard_utils.constrain(lg, "batch", "model")  # (T, Vpad) sharded
+            lg = layers._softcap(lg, cfg.final_logit_softcap)
+            if vpad_mask is not None:
+                lg = jnp.where(vpad_mask, lg, layers.NEG_INF)
+            lse = jax.nn.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, yc[:, None], axis=-1)[:, 0]
+            return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+        xent_block = jax.checkpoint(xent_block)  # recompute logits in bwd
+
+        if chunk == t:
+            tot, cnt = xent_block((h, y, m))
+        else:
+            nc = t // chunk
+
+            def body(carry, args):
+                tot, cnt = carry
+                dt_, dc = xent_block(args)
+                return (tot + dt_, cnt + dc), None
+
+            (tot, cnt), _ = jax.lax.scan(
+                body, (jnp.zeros(()), jnp.zeros(())),
+                (h.reshape(nc, chunk, d), y.reshape(nc, chunk), m.reshape(nc, chunk)))
+        nll = tot / jnp.maximum(cnt, 1.0)
+        return nll + aux, {"nll": nll, "aux": aux, "tokens": cnt}
+
+    # -------------------- decode --------------------
+    def init_cache(self, batch: int, max_len: int):
+        """Zeroed decode cache for every layer (+enc_kv slot for whisper)."""
+        cfg = self.cfg
+        hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        dt = layers._dt(cfg)
+
+        def one(kind):
+            if kind == "ssm":
+                return ssm_lib.init_ssm_state(cfg, batch)
+            if cfg.mla is not None:
+                m = cfg.mla
+                return {"c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dt),
+                        "k_rope": jnp.zeros((batch, max_len, m.rope_head_dim), dt)}
+            # sliding-window / chunked layers only ever attend within
+            # `window`, so their cache is a ring of that many slots
+            sm = max_len if kind == "attn" else min(max_len, cfg.window_size)
+            return {"k": jnp.zeros((batch, sm, hkv, hd), dt),
+                    "v": jnp.zeros((batch, sm, hkv, hd), dt)}
+
+        kinds = cfg.layer_kinds()
+        np_, nb, per = len(cfg.prefix_pattern), cfg.num_blocks, cfg.period
+        cache = {
+            "prefix": [one(kinds[i]) for i in range(np_)],
+            "blocks": [jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[one(cfg.block_pattern[j]) for _ in range(nb)]) for j in range(per)]
+            if nb else [],
+            "tail": [one(k) for k in cfg.tail_pattern],
+        }
+        if self.has_cross:
+            e = cfg.encoder
+            n_layers = cfg.num_layers
+            cache["enc_kv"] = jnp.zeros((n_layers, 2, batch, e.seq_len,
+                                         cfg.num_kv_heads, cfg.resolved_head_dim), dt)
+        return cache
+
+    def _cross_kv_from_cache(self, cache, layer_idx):
+        if "enc_kv" not in cache:
+            return None
+        ekv = cache["enc_kv"][layer_idx]
+        return (ekv[0], ekv[1])
+
+    def decode_step(self, params, cache, tokens, positions):
+        """tokens: (B,1) int32; positions: (B,) write index. Returns
+        (logits (B, V), new_cache)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        if cfg.rope_theta <= 0:
+            # absolute positions: add the embedding for the current position
+            pos_table = layers.sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+            x = x + pos_table[positions][:, None, :].astype(x.dtype)
+
+        kinds, moes = cfg.layer_kinds(), cfg.layer_is_moe()
+        per = cfg.period
+        li = 0
+        new_cache = {"prefix": [], "tail": []}
+        for p, c in zip(params["prefix"], cache["prefix"]):
+            x, nc = _layer_decode(p, x, c, positions, cfg, kinds[li], moes[li],
+                                  enc_kv=self._cross_kv_from_cache(cache, li))
+            new_cache["prefix"].append(nc)
+            li += 1
+
+        if cfg.num_blocks:
+            block_li0 = li
+
+            def block_fn(carry, xs):
+                # the stacked cache rides in the CARRY and is updated with
+                # per-block dynamic slices — passing it as scan xs/ys would
+                # read+write the entire multi-GB cache every decode step
+                x, cache_st = carry
+                bp, bi = xs
+                cache_st = list(cache_st)
+                for j in range(per):
+                    ekv = None
+                    if "enc_kv" in cache:
+                        ekv_all = jax.lax.dynamic_index_in_dim(
+                            cache["enc_kv"], block_li0 + bi * per + j, axis=0,
+                            keepdims=False)
+                        ekv = (ekv_all[0], ekv_all[1])
+                    bc_j = jax.tree_util.tree_map(
+                        lambda a: jax.lax.dynamic_index_in_dim(
+                            a, bi, 0, keepdims=False), cache_st[j])
+                    x, ncj = _layer_decode(bp[j], x, bc_j, positions, cfg,
+                                           cfg.block_pattern[j], cfg.moe_pattern[j],
+                                           enc_kv=ekv)
+                    cache_st[j] = jax.tree_util.tree_map(
+                        lambda a, u: jax.lax.dynamic_update_index_in_dim(
+                            a, u.astype(a.dtype), bi, 0), cache_st[j], ncj)
+                return (x, tuple(cache_st)), None
+
+            bi = jnp.arange(cfg.num_blocks, dtype=jnp.int32)
+            (x, new_blocks), _ = jax.lax.scan(
+                block_fn, (x, tuple(cache["blocks"])), (params["blocks"], bi))
+            new_cache["blocks"] = list(new_blocks)
+            li += cfg.num_blocks * per
+        else:
+            new_cache["blocks"] = []
+
+        for p, c, kind, is_moe in zip(params["tail"], cache["tail"],
+                                      cfg.tail_pattern, cfg.tail_moe):
+            x, nc = _layer_decode(p, x, c, positions, cfg, kind, is_moe,
+                                  enc_kv=self._cross_kv_from_cache(cache, li))
+            new_cache["tail"].append(nc)
+            li += 1
+
+        if "enc_kv" in cache:
+            new_cache["enc_kv"] = cache["enc_kv"]
+        lg = self.logits(params, x)[:, 0, :]
+        return lg, new_cache
+
+    # -------------------- prefill --------------------
+    def prefill(self, params, batch: Batch, max_len: int):
+        """Run the full prompt, build a decode cache padded to max_len.
+        Returns (last_logits (B,V), cache, next_positions (B,))."""
+        cfg = self.cfg
+        x, aux, (caches, enc_states, offset) = self.forward(
+            params, batch, remat=False, return_cache=True)
+        b, s, _ = x.shape
+        cache = self.init_cache(b, max_len)
+
+        def fill_attn(dst, kv):
+            if cfg.mla is not None:
+                c_kv, k_rope = kv["c_kv"], kv["k_rope"]
+                dst = dict(dst)
+                dst["c_kv"] = jax.lax.dynamic_update_slice(
+                    dst["c_kv"], c_kv.astype(dst["c_kv"].dtype), (0, 0, 0))
+                dst["k_rope"] = jax.lax.dynamic_update_slice(
+                    dst["k_rope"], k_rope.astype(dst["k_rope"].dtype), (0, 0, 0))
+                return dst
+            sm = dst["k"].shape[1]
+            src_k, src_v = kv["k"], kv["v"]
+            if src_k.shape[1] > sm:
+                # ring cache: keep the last `sm` keys at slots p % sm
+                p0 = src_k.shape[1] - sm
+                slots = (p0 + jnp.arange(sm)) % sm
+                return {
+                    "k": dst["k"].at[:, slots].set(
+                        src_k[:, -sm:].astype(dst["k"].dtype)),
+                    "v": dst["v"].at[:, slots].set(
+                        src_v[:, -sm:].astype(dst["v"].dtype)),
+                }
+            return {
+                "k": jax.lax.dynamic_update_slice(dst["k"], src_k.astype(dst["k"].dtype),
+                                                  (0, 0, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(dst["v"], src_v.astype(dst["v"].dtype),
+                                                  (0, 0, 0, 0)),
+            }
+
+        kinds = cfg.layer_kinds()
+        for i, c in enumerate(caches["prefix"]):
+            cache["prefix"][i] = (c if kinds[i] == "ssm" else fill_attn(cache["prefix"][i], c))
+        per = cfg.period
+        for j in range(per):
+            kind = cfg.block_pattern[j]
+            src = caches["blocks"][j]  # stacked (nb, ...) from scan
+            if kind == "ssm":
+                cache["blocks"][j] = src
+            else:
+                dst = cache["blocks"][j]
+                cache["blocks"][j] = jax.vmap(fill_attn)(dst, src)
+        li = len(cfg.prefix_pattern) + cfg.num_blocks * per
+        for i, c in enumerate(caches["tail"]):
+            kind = cfg.tail_pattern[i]
+            cache["tail"][i] = c if kind == "ssm" else fill_attn(cache["tail"][i], c)
+
+        if self.has_cross and enc_states is not None:
+            hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+            all_kv = []
+            flat_layers = unstack_layers(self.cfg, params)
+            for p in flat_layers[: cfg.num_layers]:
+                bsz, f, _ = enc_states.shape
+                k = (enc_states @ p["cross"]["wk"]).reshape(bsz, f, hkv, hd)
+                v = (enc_states @ p["cross"]["wv"]).reshape(bsz, f, hkv, hd)
+                all_kv.append(jnp.stack([k, v]))
+            cache["enc_kv"] = jnp.stack(all_kv).astype(cache["enc_kv"].dtype)
+
+        last = self.logits(params, x[:, -1:, :])[:, 0, :]
+        positions = jnp.full((b,), s, jnp.int32)
+        return last, cache, positions
+
+
+# --------------------------------------------------------------------------
+# flat per-layer access (HOBBIT engine, tests)
+# --------------------------------------------------------------------------
+
+def unstack_layers(cfg: ModelConfig, params):
+    """Flatten (prefix, scanned blocks, tail) into a per-layer param list."""
+    out = list(params["prefix"])
+    for i in range(cfg.num_blocks):
+        blk = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        out.extend(blk)
+    out.extend(params["tail"])
+    return out
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

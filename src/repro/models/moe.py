@@ -1,0 +1,221 @@
+"""Sparse MoE layer: top-k router, capacity-based scatter dispatch,
+per-expert batched GEMMs, scatter-add combine, aux losses, shared experts.
+
+Dispatch strategy (SPMD-friendly, static shapes):
+  1. router logits (T, E) in fp32; softmax -> probs; top-k per token.
+  2. capacity C = ceil(T * k * capacity_factor / E); slot = expert * C + pos
+     where pos is the token's arrival index within its expert (one-hot cumsum).
+     Tokens beyond capacity are *dropped* (their combine weight contributes 0),
+     matching capacity-factor MoE training practice.
+  3. gather tokens into an (E, C, D) buffer (+1 trash row for drops), run all
+     experts as one batched einsum, scatter-add back weighted by gate probs.
+
+Expert weights may be bf16 dense or groupwise-quantized (QTensor) — the
+mixed-precision resident-expert option used by the §Perf hillclimb and by the
+HOBBIT offload engine's device-side compute.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models import layers, shard_utils
+from repro.quant.quantize import QTensor, dequantize
+
+
+class RouterOutput(NamedTuple):
+    probs: jax.Array        # (T, E) fp32 full softmax
+    top_w: jax.Array        # (T, k) normalized combine weights
+    top_idx: jax.Array      # (T, k) int32 expert ids
+    aux_loss: jax.Array     # scalar: load-balance + z loss
+
+
+def moe_init(key, cfg: ModelConfig):
+    mc = cfg.moe
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.num_experts
+    ks = layers.split_keys(key, 4)
+    wi_cols = 2 * f if cfg.ffn_activation == "swiglu" else f
+    p = {
+        "router": layers.dense_init(ks[0], (d, e), jnp.float32),
+        "experts": {
+            "wi": layers.dense_init(ks[1], (e, d, wi_cols), layers._dt(cfg)),
+            "wo": layers.dense_init(ks[2], (e, f, d), layers._dt(cfg)),
+        },
+    }
+    if mc.num_shared_experts:
+        fs = (mc.d_ff_shared or f) * mc.num_shared_experts
+        p["shared"] = layers.ffn_init(ks[3], cfg, d_ff=fs)
+    return p
+
+
+def route(router_w, x_flat, mc: MoEConfig) -> RouterOutput:
+    """x_flat: (T, D) -> routing decision + aux losses."""
+    logits = x_flat.astype(jnp.float32) @ router_w.astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_idx = jax.lax.top_k(probs, mc.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+    # load-balance loss (Switch): E * sum_e f_e * p_e
+    e = probs.shape[-1]
+    hard = jax.nn.one_hot(top_idx[:, 0], e, dtype=jnp.float32)
+    f_e = jnp.mean(hard, axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    lb = e * jnp.sum(f_e * p_e) * mc.router_aux_weight
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))) * mc.router_z_weight
+    return RouterOutput(probs, top_w, top_idx.astype(jnp.int32), lb + z)
+
+
+def _capacity(t: int, mc: MoEConfig) -> int:
+    c = int(np.ceil(t * mc.top_k * mc.capacity_factor / mc.num_experts))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for tiling friendliness
+
+
+def dispatch_indices(top_idx, mc: MoEConfig, capacity: int):
+    """(T,k) expert ids -> (T,k) buffer slots in [0, E*C] (E*C = dropped)."""
+    t, k = top_idx.shape
+    e = mc.num_experts
+    flat = top_idx.reshape(t * k)
+    onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)          # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                        # arrival index
+    pos = jnp.sum(pos * onehot, axis=-1)                        # (T*k,)
+    keep = pos < capacity
+    slot = jnp.where(keep, flat * capacity + pos, e * capacity)
+    return slot.reshape(t, k), keep.reshape(t, k)
+
+
+def expert_ffn(experts, xb, cfg: ModelConfig, tok_ax=None, groups: int = 1):
+    """xb: (E, C, D) or (G, E, C, D) -> same shape through each expert's FFN.
+
+    Sharding: experts over `model` when E divides it; otherwise the hidden
+    d_ff dim takes the model axis (megatron-style within each expert).
+    With G > 1 groups, the group dim carries the data axis."""
+    wi, wo = experts["wi"], experts["wo"]
+    if isinstance(wi, QTensor):
+        wi = dequantize(wi, dtype=xb.dtype)
+    if isinstance(wo, QTensor):
+        wo = dequantize(wo, dtype=xb.dtype)
+    grouped = xb.ndim == 4
+    e = xb.shape[1] if grouped else xb.shape[0]
+    e_ok = e % max(shard_utils.axis_size("model"), 1) == 0
+    e_ax = "model" if e_ok else None
+    f_ax = None if e_ok else "model"
+
+    def act(h):
+        if cfg.ffn_activation == "swiglu":
+            a, u = jnp.split(h, 2, axis=-1)
+            return jax.nn.silu(a.astype(jnp.float32)).astype(xb.dtype) * u
+        if cfg.ffn_activation == "sq_relu":
+            return jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(xb.dtype)
+        return jax.nn.gelu(h.astype(jnp.float32)).astype(xb.dtype)
+
+    if grouped:
+        h = jnp.einsum("gecd,edf->gecf", xb, wi)
+        h = shard_utils.constrain(h, "batch" if xb.shape[0] > 1 else None,
+                                  e_ax, None, f_ax)
+        return jnp.einsum("gecf,efd->gecd", act(h), wo)
+    h = jnp.einsum("ecd,edf->ecf", xb, wi)
+    # decode path (tiny token counts, e_ok): with_sharding_constraint(None)
+    # FORCES replication, which would make XLA all-gather the column-sharded
+    # decode-mode expert weights — let propagation follow the weights instead.
+    if tok_ax is not None or not e_ok:
+        h = shard_utils.constrain(h, e_ax, tok_ax, f_ax)
+    return jnp.einsum("ecf,efd->ecd", act(h), wo)
+
+
+def moe_forward(p, x, cfg: ModelConfig, router_out: Optional[RouterOutput] = None,
+                groups: Optional[int] = None):
+    """x: (B, S, D).  Returns (y, aux_loss, router_out).
+
+    GShard-style *grouped* dispatch: tokens are split into G groups (G = the
+    data-parallel axis size, so each group lives on one data shard) and the
+    capacity gather/scatter happens per group.  A single global dispatch
+    would gather every token to every chip (XLA lowers a cross-shard take to
+    an all-gather of the operand — ~17 GB/chip at 1M tokens)."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    r = router_out if router_out is not None else route(p["router"], xf, mc)
+
+    e = mc.num_experts
+    g = groups if groups is not None else shard_utils.dp_size()
+    # grouped dispatch pays off for big token counts (train/prefill); decode
+    # steps keep a single group so the weight-stationary decode sharding
+    # (megatron col/row experts) is not disturbed
+    if groups is None and (t % g or t // g < 512):
+        g = 1
+    if t % g:
+        g = 1
+    tl = t // g
+    cap = _capacity(tl, mc)
+    tok_ax = "batch" if cap >= 512 or g > 1 else None
+    e_ax = "model" if e % max(shard_utils.axis_size("model"), 1) == 0 else None
+
+    top_idx_g = r.top_idx.reshape(g, tl, mc.top_k)
+    slot, keep = jax.vmap(
+        lambda ti: dispatch_indices(ti, mc, cap))(top_idx_g)     # (G, tl, k)
+
+    # inverse slot map per group: slot -> local token row (tl = pad row);
+    # scattering 1-D indices then row-gathering avoids the giant 2-D scatter
+    # index tensors XLA would otherwise materialize.
+    tok_idx = jnp.broadcast_to(jnp.arange(tl, dtype=jnp.int32)[None, :, None],
+                               slot.shape).reshape(g, -1)
+    gather_rows = jnp.full((g, e * cap + 1), tl, jnp.int32)
+    gather_rows = jax.vmap(lambda gr, sl, ti: gr.at[sl].set(ti, mode="drop"))(
+        gather_rows, slot.reshape(g, -1), tok_idx)
+    xg = shard_utils.constrain(xf.reshape(g, tl, d), "batch" if g > 1 else None,
+                               None if g > 1 else tok_ax, None)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((g, 1, d), xf.dtype)], axis=1)
+    xb = jax.vmap(lambda xp, gr: jnp.take(xp, gr[: e * cap], axis=0))(
+        xg_pad, gather_rows)                                     # (G, E*cap, D)
+    xb = xb.reshape(g, e, cap, d)
+    if g > 1:
+        xb = shard_utils.constrain(xb, "batch", e_ax, None, None)
+        yb = expert_ffn(p["experts"], xb, cfg, groups=g)
+    else:
+        xb0 = shard_utils.constrain(xb[0], e_ax, tok_ax, None)
+        yb = expert_ffn(p["experts"], xb0, cfg, tok_ax=tok_ax)[None]
+    yb = yb.reshape(g, e * cap, d)
+
+    yb_pad = jnp.concatenate([yb, jnp.zeros((g, 1, d), yb.dtype)], axis=1)
+    y_choice = jax.vmap(lambda yp, sl: jnp.take(yp, sl, axis=0))(
+        yb_pad, slot.reshape(g, -1))                             # (G, tl*k, D)
+    y_choice = y_choice.reshape(t, mc.top_k, d)
+    w = (r.top_w * keep.reshape(t, mc.top_k).astype(r.top_w.dtype)).astype(x.dtype)
+    y = jnp.einsum("tk,tkd->td", w, y_choice)
+    y = shard_utils.constrain(y, "batch", None)
+
+    if mc.num_shared_experts and "shared" in p:
+        y = y + layers.ffn_forward(p["shared"], xf, cfg)
+    return y.reshape(b, s, d), r.aux_loss, r
+
+
+def moe_forward_dense_eval(p, x, cfg: ModelConfig):
+    """Oracle: compute every expert densely and combine by full top-k weights.
+    O(E) FLOPs — used only in tests to validate the dispatch path."""
+    mc = cfg.moe
+    b, s, d = x.shape
+    xf = x.reshape(b * s, d)
+    r = route(p["router"], xf, mc)
+    wi, wo = p["experts"]["wi"], p["experts"]["wo"]
+    if isinstance(wi, QTensor):
+        wi = dequantize(wi, dtype=x.dtype)
+    if isinstance(wo, QTensor):
+        wo = dequantize(wo, dtype=x.dtype)
+    h = jnp.einsum("td,edf->etf", xf, wi)
+    if cfg.ffn_activation == "swiglu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("etf,efd->etd", h, wo)                      # (E,T,D)
+    mask = jnp.zeros((b * s, mc.num_experts), r.top_w.dtype)
+    mask = mask.at[jnp.arange(b * s)[:, None], r.top_idx].set(r.top_w)
+    y = jnp.einsum("te,etd->td", mask, ye.astype(r.top_w.dtype)).astype(x.dtype)
+    if mc.num_shared_experts and "shared" in p:
+        y = y + layers.ffn_forward(p["shared"], xf, cfg)
+    return y.reshape(b, s, d), r

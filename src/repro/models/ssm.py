@@ -1,0 +1,204 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+Train/prefill use the chunked matmul form: quadratic attention-like term
+inside each chunk plus a sequential inter-chunk state recurrence (lax.scan),
+so cost is O(S * L) with chunk length L and the MXU does all the work.
+Decode is the O(1) recurrent update on the carried state.
+
+Shapes: d_inner = expand * d_model, H = d_inner / head_dim heads,
+state N = d_state, head dim P = head_dim, n_groups G (B/C shared per group).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers
+
+
+def ssm_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nheads, conv_dim
+
+
+def ssm_init(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    ks = layers.split_keys(key, 4)
+    in_cols = 2 * d_in + 2 * s.n_groups * s.d_state + nheads
+    return {
+        "in_proj": layers.dense_init(ks[0], (d, in_cols), layers._dt(cfg)),
+        "conv_w": layers.dense_init(ks[1], (s.d_conv, conv_dim), layers._dt(cfg), scale=0.5),
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm": jnp.zeros((d_in,), jnp.float32),
+        "out_proj": layers.dense_init(ks[3], (d_in, d), layers._dt(cfg)),
+    }
+
+
+def _split_proj(proj, cfg: ModelConfig):
+    s = cfg.ssm
+    d_in, nheads, _ = ssm_dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, xbc, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * gn], axis=-1)
+    return z, xbc, dt  # (..., d_in), (..., d_in+2gn), (..., nheads)
+
+
+def _causal_conv(xbc, conv_w, conv_b, cfg: ModelConfig):
+    """Depthwise causal conv over the sequence dim. xbc: (B,S,C)."""
+    w = conv_w.astype(jnp.float32)                      # (K, C)
+    k = w.shape[0]
+    xf = xbc.astype(jnp.float32)
+    pad = jnp.pad(xf, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xf.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + conv_b).astype(xbc.dtype)
+
+
+def _gated_norm(y, z, scale, eps):
+    """RMSNorm(y * silu(z)) — mamba2's gated output norm. (..., d_in)."""
+    g = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    return (g * jax.lax.rsqrt(ms + eps) * (1.0 + scale)).astype(y.dtype)
+
+
+def ssd_chunked(x, dt, a, b, c, d_skip, chunk: int):
+    """SSD scan in matmul form.
+    x: (B,S,H,P)  dt: (B,S,H)  a: (H,) negative  b,c: (B,S,G,N)  d_skip: (H,)
+    Returns y: (B,S,H,P) and final state (B,H,P,N)."""
+    bs, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(bs, nc, chunk, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bs, nc, chunk, h)
+    bf = b.astype(jnp.float32).reshape(bs, nc, chunk, g, n)
+    cf = c.astype(jnp.float32).reshape(bs, nc, chunk, g, n)
+    bf = jnp.repeat(bf, rep, axis=3)                    # (B,nc,L,H,N)
+    cf = jnp.repeat(cf, rep, axis=3)
+
+    da = dtf * a[None, None, None, :]                   # (B,nc,L,H) <= 0
+    da_cs = jnp.cumsum(da, axis=2)                      # within-chunk cumsum
+    da_total = da_cs[:, :, -1, :]                       # (B,nc,H)
+
+    # intra-chunk (the "attention-like" term):
+    # Lmat[i,j] = exp(da_cs[i]-da_cs[j]) for i>=j else 0
+    diff = da_cs[:, :, :, None, :] - da_cs[:, :, None, :, :]   # (B,nc,L,L,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    lmat = jnp.where(causal, jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bzihn,bzjhn->bzijh", cf, bf)              # (B,nc,L,L,H)
+    y_diag = jnp.einsum("bzijh,bzjh,bzjhp->bzihp", cb * lmat, dtf, xf)
+
+    # per-chunk input->state contribution
+    decay_to_end = jnp.exp(da_total[:, :, None, :] - da_cs)     # (B,nc,L,H)
+    s_chunk = jnp.einsum("bzlh,bzlh,bzlhn,bzlhp->bzhpn",
+                         decay_to_end, dtf, bf, xf)             # (B,nc,H,P,N)
+
+    # inter-chunk recurrence
+    def step(h_prev, xs):
+        s_c, da_tot = xs                                        # (B,H,P,N),(B,H)
+        h_new = h_prev * jnp.exp(da_tot)[:, :, None, None] + s_c
+        return h_new, h_prev
+
+    h0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        step, h0, (s_chunk.transpose(1, 0, 2, 3, 4), da_total.transpose(1, 0, 2)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    # inter-chunk output: y_off[i] = C_i . (exp(da_cs[i]) * h_prev)
+    y_off = jnp.einsum("bzlhn,bzlh,bzhpn->bzlhp",
+                       cf, jnp.exp(da_cs), h_prevs)
+    y = (y_diag + y_off).reshape(bs, s, h, p)
+    y = y + xf.reshape(bs, s, h, p) * d_skip[None, None, :, None]
+    return y.astype(x.dtype), h_final
+
+
+def ssm_forward(p, x, cfg: ModelConfig):
+    """Full-sequence mamba2 block. x: (B,S,D).
+    Returns (out, state) where state = dict(h, conv) continues into decode."""
+    s = cfg.ssm
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, cfg)
+    # conv tail (pre-activation inputs) for decode handoff
+    kw = p["conv_w"].shape[0]
+    pad_raw = jnp.pad(xbc.astype(jnp.float32), ((0, 0), (kw - 1, 0), (0, 0)))
+    conv_tail = pad_raw[:, -(kw - 1):, :] if kw > 1 else pad_raw[:, :0, :]
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], cfg)
+    gn = s.n_groups * s.d_state
+    xs, b, c = jnp.split(xbc, [d_in, d_in + gn], axis=-1)
+    bsz, seq, _ = x.shape
+    xs = xs.reshape(bsz, seq, nheads, s.head_dim)
+    b = b.reshape(bsz, seq, s.n_groups, s.d_state)
+    c = c.reshape(bsz, seq, s.n_groups, s.d_state)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    chunk = min(s.chunk_size, seq)
+    if seq % chunk:  # pad sequence to a chunk multiple (masked by dt=0)
+        pad = chunk - seq % chunk
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtf = jnp.pad(dtf, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        y, h_final = ssd_chunked(xs, dtf, a, b, c, p["D"], chunk)
+        y = y[:, :seq]
+    else:
+        y, h_final = ssd_chunked(xs, dtf, a, b, c, p["D"], chunk)
+    y = _gated_norm(y.reshape(bsz, seq, d_in), z, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"h": h_final, "conv": conv_tail}
+
+
+def ssm_decode(p, x, state, cfg: ModelConfig):
+    """Single-token recurrent update.
+    x: (B,1,D); state: dict(h=(B,H,P,N) fp32, conv=(B,K-1,convdim)).
+    Returns (out (B,1,D), new state)."""
+    s = cfg.ssm
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    bsz = x.shape[0]
+    proj = x[:, 0, :] @ p["in_proj"]                     # (B, cols)
+    z, xbc, dt = _split_proj(proj, cfg)
+    # rolling causal conv
+    k = p["conv_w"].shape[0]
+    window = jnp.concatenate([state["conv"], xbc[:, None, :].astype(jnp.float32)], axis=1)
+    wf = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window, wf) + p["conv_b"]
+    xbc_act = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+
+    gn = s.n_groups * s.d_state
+    xs, b, c = jnp.split(xbc_act, [d_in, d_in + gn], axis=-1)
+    xs = xs.reshape(bsz, nheads, s.head_dim)
+    b = jnp.repeat(b.reshape(bsz, s.n_groups, s.d_state), nheads // s.n_groups, axis=1)
+    c = jnp.repeat(c.reshape(bsz, s.n_groups, s.d_state), nheads // s.n_groups, axis=1)
+    dtf = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dtf * a)                                 # (B,H)
+    h = state["h"] * da[:, :, None, None] + jnp.einsum(
+        "bh,bhn,bhp->bhpn", dtf, b.astype(jnp.float32), xs.astype(jnp.float32))
+    y = jnp.einsum("bhn,bhpn->bhp", c.astype(jnp.float32), h)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, d_in).astype(x.dtype)
+    y = _gated_norm(y, z, p["norm"], cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None, :], {"h": h, "conv": new_conv}
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    d_in, nheads, conv_dim = ssm_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), jnp.float32),
+    }

@@ -1,0 +1,176 @@
+"""Groupwise symmetric weight quantization: int8, packed int4 and int2.
+
+This is the numerical substrate of HOBBIT's mixed-precision experts.  Weights are
+quantized *per group along the contraction (input) dimension* with a symmetric
+scale, matching llama.cpp-style k-quant block layouts in spirit:
+
+    w[g*G + i, n]  ~=  q[g*G + i, n] * scale[g, n]
+
+where ``G`` is the group size, ``q`` is a signed integer code and ``scale`` is
+fp32 (stored bf16-able).  int4 and int2 codes are *packed* two (resp. four) per
+int8 byte along the contraction dim so the in-memory footprint is the real one —
+the Pallas fused dequant-matmul kernel consumes the packed layout directly.
+
+Everything here is pure jnp and jit-friendly; QTensor is a pytree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Number of codes packed per int8 storage byte.
+PACK_FACTOR = {8: 1, 4: 2, 2: 4}
+# Max magnitude representable per bit-width (symmetric, zero-point-free).
+QMAX = {8: 127, 4: 7, 2: 1}
+
+DEFAULT_GROUP = 128
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """A groupwise-quantized 2-D (or stacked N-D) tensor.
+
+    data:   int8 storage, shape (..., K // pack, N) — packed codes.
+    scale:  fp32, shape (..., K // group, N) — one scale per group per column.
+    bits / group_size / orig_k are static (aux) fields.
+    """
+
+    data: jax.Array
+    scale: jax.Array
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    group_size: int = dataclasses.field(metadata=dict(static=True))
+    orig_k: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (*self.data.shape[:-2], self.orig_k, self.data.shape[-1])
+
+    @property
+    def nbytes(self) -> int:
+        return self.data.size * self.data.dtype.itemsize + self.scale.size * 2
+
+    def astuple(self):
+        return self.data, self.scale
+
+
+def _check_dims(k: int, bits: int, group_size: int) -> None:
+    if bits not in PACK_FACTOR:
+        raise ValueError(f"unsupported bit-width {bits}; want one of {list(PACK_FACTOR)}")
+    if k % group_size != 0:
+        raise ValueError(f"contraction dim {k} not divisible by group size {group_size}")
+    if group_size % PACK_FACTOR[bits] != 0:
+        raise ValueError(f"group size {group_size} not divisible by pack factor")
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack signed integer codes (..., K, N) int8 -> (..., K//pack, N) int8.
+
+    Codes are stored in unsigned nibble/crumb form (code + qmax offsetting is NOT
+    used — we keep two's-complement in the low bits, masked on unpack)."""
+    pack = PACK_FACTOR[bits]
+    if pack == 1:
+        return codes.astype(jnp.int8)
+    *lead, k, n = codes.shape
+    u = codes.astype(jnp.uint8) & ((1 << bits) - 1)
+    u = u.reshape(*lead, k // pack, pack, n)
+    out = jnp.zeros((*lead, k // pack, n), dtype=jnp.uint8)
+    for i in range(pack):
+        out = out | (u[..., i, :] << (bits * i))
+    return out.astype(jnp.int8)
+
+
+def unpack_codes(packed: jax.Array, bits: int) -> jax.Array:
+    """Unpack (..., K//pack, N) int8 -> signed codes (..., K, N) int8."""
+    pack = PACK_FACTOR[bits]
+    if pack == 1:
+        return packed
+    *lead, kp, n = packed.shape
+    u = packed.astype(jnp.uint8)
+    parts = []
+    mask = (1 << bits) - 1
+    for i in range(pack):
+        nib = (u >> (bits * i)) & mask
+        # sign-extend: values >= 2^(bits-1) are negative.
+        signed = jnp.where(nib >= (1 << (bits - 1)), nib.astype(jnp.int16) - (1 << bits), nib.astype(jnp.int16))
+        parts.append(signed.astype(jnp.int8))
+    out = jnp.stack(parts, axis=-2)  # (..., kp, pack, n)
+    return out.reshape(*lead, kp * pack, n)
+
+
+@partial(jax.jit, static_argnames=("bits", "group_size"))
+def quantize(w: jax.Array, bits: int = 8, group_size: int = DEFAULT_GROUP) -> QTensor:
+    """Groupwise symmetric quantization along dim -2 (the contraction dim)."""
+    *lead, k, n = w.shape
+    _check_dims(k, bits, group_size)
+    g = k // group_size
+    wg = w.astype(jnp.float32).reshape(*lead, g, group_size, n)
+    if bits == 2:
+        # Ternary (TWN-style): threshold at 0.7*mean|w|, scale = mean |w| above it.
+        # Far lower MSE than amax/1 scaling for Gaussian-ish weights.
+        absw = jnp.abs(wg)
+        delta = 0.7 * jnp.mean(absw, axis=-2, keepdims=True)
+        mask = absw > delta
+        scale = jnp.sum(absw * mask, axis=-2) / jnp.maximum(jnp.sum(mask, axis=-2), 1)
+    else:
+        amax = jnp.max(jnp.abs(wg), axis=-2)  # (..., g, n)
+        scale = amax / QMAX[bits]
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    codes = jnp.clip(jnp.round(wg / scale[..., :, None, :]), -QMAX[bits], QMAX[bits]).astype(jnp.int8)
+    codes = codes.reshape(*lead, k, n)
+    return QTensor(data=pack_codes(codes, bits), scale=scale, bits=bits, group_size=group_size, orig_k=k)
+
+
+@partial(jax.jit, static_argnames=("dtype",))
+def dequantize(q: QTensor, dtype=jnp.float32) -> jax.Array:
+    """Reconstruct the (approximate) dense weight."""
+    codes = unpack_codes(q.data, q.bits).astype(jnp.float32)
+    *lead, k, n = codes.shape
+    g = k // q.group_size
+    codes = codes.reshape(*lead, g, q.group_size, n)
+    w = codes * q.scale[..., :, None, :]
+    return w.reshape(*lead, k, n).astype(dtype)
+
+
+def quantize_tree(tree, bits: int = 8, group_size: int = DEFAULT_GROUP, predicate=None):
+    """Quantize every >=2-D float leaf of a pytree (optionally filtered by path)."""
+
+    def _q(path, leaf):
+        if not isinstance(leaf, (jax.Array, np.ndarray)) or leaf.ndim < 2:
+            return leaf
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return leaf
+        if predicate is not None and not predicate(path, leaf):
+            return leaf
+        k = leaf.shape[-2]
+        if k % group_size != 0:
+            return leaf
+        return quantize(jnp.asarray(leaf), bits=bits, group_size=group_size)
+
+    return jax.tree_util.tree_map_with_path(_q, tree)
+
+
+def quantization_error(w: jax.Array, bits: int, group_size: int = DEFAULT_GROUP) -> float:
+    """Relative Frobenius reconstruction error (for tests / calibration)."""
+    q = quantize(w, bits=bits, group_size=group_size)
+    wr = dequantize(q)
+    num = jnp.linalg.norm(w.astype(jnp.float32) - wr)
+    den = jnp.linalg.norm(w.astype(jnp.float32)) + 1e-12
+    return float(num / den)
+
+
+def expert_nbytes(d_model: int, d_ff: int, bits: int, n_matrices: int = 3,
+                  group_size: int = DEFAULT_GROUP) -> int:
+    """Bytes to store one (SwiGLU) expert at a given precision — the quantity that
+    drives HOBBIT's loading-cost model.  bits=16 means bf16 dense."""
+    params = n_matrices * d_model * d_ff
+    if bits == 16:
+        return params * 2
+    scales = params // group_size
+    return params * bits // 8 + scales * 2

@@ -1,0 +1,106 @@
+"""Request batching for the serving path.
+
+Requests are bucketed by exact prompt length (the paper's workload uses
+fixed prompt lengths of 16 / 128) and served as fixed batches; per-request
+latency statistics are tracked.  Decode supports per-slot positions, so
+mixed-completion-length batches finish independently (a slot's output is
+truncated at its own max_new_tokens).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Batch, Model
+from repro.serving.decode import make_prefill_step, make_serve_step, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (S,)
+    max_new_tokens: int
+    submitted_at: float = 0.0
+    # filled on completion:
+    output: Optional[np.ndarray] = None
+    prefill_latency_s: float = 0.0
+    total_latency_s: float = 0.0
+
+
+class BatchingServer:
+    """Bucket-by-length static batching with a jitted decode step per shape."""
+
+    def __init__(self, model: Model, params, *, max_batch: int = 8,
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self.queue: Dict[int, List[Request]] = defaultdict(list)
+        self._prefill = jax.jit(make_prefill_step(model, max_len))
+        self._step = jax.jit(make_serve_step(model), donate_argnums=1)
+        self.completed: List[Request] = []
+
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue[len(req.prompt)].append(req)
+
+    def _serve_batch(self, reqs: List[Request]):
+        b = len(reqs)
+        prompts = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
+        batch = Batch(tokens=prompts, loss_mask=jnp.ones(prompts.shape))
+        t0 = time.time()
+        logits, cache, positions = self._prefill(self.params, batch)
+        jax.block_until_ready(logits)
+        t_prefill = time.time() - t0
+
+        steps = max(r.max_new_tokens for r in reqs)
+        outs = [[] for _ in range(b)]
+        self.key, sub = jax.random.split(self.key)
+        tok = sample_token(logits, sub, self.temperature)
+        for i in range(steps):
+            for j in range(b):
+                if i < reqs[j].max_new_tokens:
+                    outs[j].append(int(tok[j]))
+            if i == steps - 1:
+                break
+            self.key, sub = jax.random.split(self.key)
+            logits, cache = self._step(self.params, cache, tok[:, None], positions)
+            positions = positions + 1
+            tok = sample_token(logits, sub, self.temperature)
+        done = time.time()
+        for j, r in enumerate(reqs):
+            r.output = np.asarray(outs[j], np.int32)
+            r.prefill_latency_s = t_prefill
+            r.total_latency_s = done - r.submitted_at
+            self.completed.append(r)
+
+    def run(self):
+        """Drain the queue, largest buckets first."""
+        for length in sorted(self.queue, key=lambda k: -len(self.queue[k])):
+            reqs = self.queue[length]
+            while reqs:
+                chunk, self.queue[length] = reqs[: self.max_batch], reqs[self.max_batch:]
+                reqs = self.queue[length]
+                self._serve_batch(chunk)
+
+    def stats(self) -> dict:
+        if not self.completed:
+            return {}
+        tot_new = sum(len(r.output) for r in self.completed)
+        tot_decode = sum(r.total_latency_s - r.prefill_latency_s for r in self.completed)
+        return {
+            "requests": len(self.completed),
+            "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in self.completed])),
+            "mean_total_s": float(np.mean([r.total_latency_s for r in self.completed])),
+            "decode_tok_s": tot_new / max(tot_decode, 1e-9),
+        }

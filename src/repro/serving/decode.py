@@ -1,0 +1,93 @@
+"""Serving substrate: prefill + decode step builders and a generate loop.
+
+`make_serve_step` is what the decode-shape dry-runs lower: one new token
+against a KV cache of length seq_len.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Batch, Model
+
+
+def make_serve_step(model: Model) -> Callable:
+    """serve_step(params, cache, tokens (B,1), positions (B,)) ->
+    (logits (B,V), new_cache)."""
+
+    def serve_step(params, cache, tokens, positions):
+        return model.decode_step(params, cache, tokens, positions)
+
+    return serve_step
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch: Batch):
+        return model.prefill(params, batch, max_len)
+
+    return prefill_step
+
+
+def sample_token(logits, key, temperature: float = 0.0, top_k: int = 0):
+    """logits (B, V) -> (B,) int32."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits / temperature
+    if top_k:
+        vals, _ = jax.lax.top_k(lg, top_k)
+        lg = jnp.where(lg < vals[:, -1:], -1e30, lg)
+    return jax.random.categorical(key, lg).astype(jnp.int32)
+
+
+class GenerateResult(NamedTuple):
+    tokens: np.ndarray          # (B, prompt+new)
+    prefill_s: float
+    decode_s: float
+    steps: int
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.tokens.shape[0] * self.steps / max(self.decode_s, 1e-9)
+
+
+def generate(model: Model, params, prompts: jnp.ndarray, new_tokens: int, *,
+             max_len: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0, extra: Optional[dict] = None,
+             jit: bool = True) -> GenerateResult:
+    """Greedy/temperature generation with a jitted decode step."""
+    import time
+
+    b, s = prompts.shape
+    max_len = max_len or (s + new_tokens + 1)
+    extra = extra or {}
+    batch = Batch(tokens=prompts, loss_mask=jnp.ones(prompts.shape), **extra)
+
+    prefill = make_prefill_step(model, max_len)
+    step = make_serve_step(model)
+    if jit:
+        prefill = jax.jit(prefill)
+        step = jax.jit(step, donate_argnums=1)
+
+    t0 = time.time()
+    logits, cache, positions = prefill(params, batch)
+    logits.block_until_ready()
+    t1 = time.time()
+
+    key = jax.random.PRNGKey(seed)
+    out = [np.asarray(prompts)]
+    tok = sample_token(logits, key, temperature)
+    for i in range(new_tokens):
+        out.append(np.asarray(tok)[:, None])
+        if i == new_tokens - 1:
+            break
+        key, sub = jax.random.split(key)
+        logits, cache = step(params, cache, tok[:, None], positions)
+        positions = positions + 1
+        tok = sample_token(logits, sub, temperature)
+    t2 = time.time()
+    return GenerateResult(np.concatenate(out, axis=1), t1 - t0, t2 - t1, new_tokens)

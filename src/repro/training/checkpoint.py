@@ -1,0 +1,83 @@
+"""Checkpointing: pytree <-> directory of .npz shards + JSON manifest.
+
+No orbax dependency; handles arbitrary nested dict/list/tuple/NamedTuple
+pytrees of jax/numpy arrays, preserves dtypes (incl. bfloat16 via a uint16
+view), and is resumable (save step, restore into the same treedef).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = "__bf16__"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save(ckpt_dir: str, tree: Any, step: int = 0) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    arrays = {}
+    meta = {"step": step, "leaves": {}}
+    for i, (path, leaf) in enumerate(flat):
+        key = f"a{i}"
+        arr = np.asarray(leaf)
+        entry = {"path": _path_str(path), "dtype": str(arr.dtype)}
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+            entry["dtype"] = _BF16
+        arrays[key] = arr
+        meta["leaves"][key] = entry
+    np.savez(os.path.join(ckpt_dir, f"step_{step}.npz"), **arrays)
+    with open(os.path.join(ckpt_dir, f"step_{step}.json"), "w") as f:
+        json.dump(meta, f)
+    with open(os.path.join(ckpt_dir, "latest"), "w") as f:
+        f.write(str(step))
+    return os.path.join(ckpt_dir, f"step_{step}.npz")
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    p = os.path.join(ckpt_dir, "latest")
+    if not os.path.exists(p):
+        return None
+    return int(open(p).read().strip())
+
+
+def restore(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any, int]:
+    """Restore into the structure of `like` (shape/dtype validated)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
+    meta = json.load(open(os.path.join(ckpt_dir, f"step_{step}.json")))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    restored = []
+    for i, leaf in enumerate(leaves_like):
+        key = f"a{i}"
+        arr = data[key]
+        if meta["leaves"][key]["dtype"] == _BF16:
+            arr = arr.view(jnp.bfloat16)
+        want = np.asarray(leaf)
+        if arr.shape != want.shape:
+            raise ValueError(
+                f"leaf {meta['leaves'][key]['path']}: shape {arr.shape} != {want.shape}")
+        restored.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, restored), step

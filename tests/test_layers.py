@@ -1,0 +1,132 @@
+"""Layer-level unit tests: masks, RoPE, softcap, chunked attention,
+MLA absorbed-vs-naive equivalence, FFN variants."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config, smoke_variant
+from repro.models import layers as L
+
+
+def test_causal_mask():
+    pos = jnp.arange(4)[None, :]
+    m = np.asarray(L.make_mask(pos, pos, "attn", 0))[0]
+    assert m.tolist() == [[1, 0, 0, 0], [1, 1, 0, 0], [1, 1, 1, 0], [1, 1, 1, 1]]
+
+
+def test_sliding_window_mask():
+    pos = jnp.arange(6)[None, :]
+    m = np.asarray(L.make_mask(pos, pos, "attn_local", 2))[0]
+    # each query attends to itself and the previous token only
+    for i in range(6):
+        for j in range(6):
+            assert m[i, j] == (j <= i and i - j < 2)
+
+
+def test_chunked_attention_mask():
+    pos = jnp.arange(8)[None, :]
+    m = np.asarray(L.make_mask(pos, pos, "attn_chunked", 4))[0]
+    for i in range(8):
+        for j in range(8):
+            assert m[i, j] == (j <= i and i // 4 == j // 4)
+
+
+def test_rope_preserves_norm_and_relative_phase():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1, 8, 2, 64)), jnp.float32)
+    pos = jnp.arange(8)[None, :]
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x), axis=-1),
+                               np.linalg.norm(np.asarray(y), axis=-1),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, 64)), jnp.float32)
+    def dot_at(i, j):
+        qi = L.apply_rope(q, jnp.asarray([[i]]), 1000.0)
+        kj = L.apply_rope(k, jnp.asarray([[j]]), 1000.0)
+        return float(jnp.sum(qi * kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+    assert dot_at(3, 1) != pytest.approx(dot_at(7, 1), rel=1e-3)
+
+
+def test_softcap_bounds_logits():
+    x = jnp.asarray([-1e4, -10.0, 0.0, 10.0, 1e4])
+    y = np.asarray(L._softcap(x, 50.0))
+    assert (np.abs(y) <= 50.0 + 1e-5).all()
+    assert y[2] == 0.0
+    np.testing.assert_allclose(y[3], 10.0, atol=0.2)  # ~linear in the middle
+
+
+@pytest.mark.parametrize("kind,window", [("attn", 0), ("attn_local", 3),
+                                         ("attn_chunked", 4)])
+def test_chunked_mha_equals_mha(kind, window):
+    rng = np.random.default_rng(1)
+    b, s, h, hd = 2, 16, 4, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, 2, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, 2, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    full = L.mha(q, k, v, L.make_mask(pos, pos, kind, window), 0.0, 0.35)
+    chunked = L.chunked_mha(q, k, v, pos, pos, kind, window, 0.0, 0.35,
+                            q_chunk=4)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_mha_ragged_tail():
+    rng = np.random.default_rng(2)
+    b, s, h, hd = 1, 10, 2, 8      # 10 = 2*4 + tail 2
+    q = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    k = v = jnp.asarray(rng.normal(size=(b, s, h, hd)), jnp.float32)
+    pos = jnp.arange(s)[None]
+    full = L.mha(q, k, v, L.make_mask(pos, pos, "attn", 0), 0.0, 0.35)
+    chunked = L.chunked_mha(q, k, v, pos, pos, "attn", 0, 0.0, 0.35, q_chunk=4)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_mla_chunked_matches_unchunked():
+    cfg = smoke_variant(get_config("deepseek-v2-236b"), d_model=128)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    p = L.mla_init(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(2, 12, 128)) * 0.3, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(12)[None], (2, 12))
+    out_full, kv_full = L.mla_forward(p, x, pos, cfg, q_chunk=64)
+    out_chunk, kv_chunk = L.mla_forward(p, x, pos, cfg, q_chunk=5)  # ragged
+    np.testing.assert_allclose(np.asarray(out_full), np.asarray(out_chunk),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("act", ["swiglu", "gelu", "sq_relu"])
+def test_ffn_variants(act):
+    cfg = smoke_variant(get_config("granite-3-2b"), d_model=64)
+    cfg = dataclasses.replace(cfg, dtype="float32", ffn_activation=act)
+    p = L.ffn_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(np.random.default_rng(4).normal(size=(2, 8, 64)), jnp.float32)
+    y = L.ffn_forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    if act == "sq_relu":
+        # squared relu of zero input (zero weights on x=0) stays zero
+        y0 = L.ffn_forward(p, jnp.zeros_like(x), cfg)
+        np.testing.assert_allclose(np.asarray(y0), 0.0, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(2, 12), window=st.integers(1, 6), seed=st.integers(0, 999))
+def test_property_window_mask_never_exceeds_causal(s, window, seed):
+    pos = jnp.arange(s)[None]
+    causal = np.asarray(L.make_mask(pos, pos, "attn", 0))
+    local = np.asarray(L.make_mask(pos, pos, "attn_local", window))
+    chunked = np.asarray(L.make_mask(pos, pos, "attn_chunked", window))
+    assert not (local & ~causal).any()
+    assert not (chunked & ~causal).any()
+    # diagonal always attendable
+    assert local[0].diagonal().all() and chunked[0].diagonal().all()

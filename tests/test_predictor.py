@@ -1,0 +1,82 @@
+"""Adaptive Expert Predictor tests: stacked prediction, adaptive walk
+semantics, pinning, accuracy bookkeeping."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AdaptiveExpertPredictor, MultidimensionalCache,
+                        Thresholds)
+from repro.core.policies import LRU
+
+
+def _routers(l=4, d=32, e=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.normal(size=(d, e)).astype(np.float32) for _ in range(l)]
+
+
+def test_predict_layers_shapes_and_range():
+    pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=3)
+    h = np.random.default_rng(1).normal(size=32).astype(np.float32)
+    out = pred.predict_layers(h, 0)
+    assert [p.layer for p in out] == [1, 2, 3]
+    for p in out:
+        assert len(p.experts) == 2
+        assert all(0 <= e < 8 for e in p.experts)
+        assert (p.gate_vals[:-1] >= p.gate_vals[1:]).all()  # sorted desc
+
+
+def test_predict_layers_clips_at_model_end():
+    pred = AdaptiveExpertPredictor(_routers(l=3), top_k=1, p=4)
+    h = np.zeros(32, np.float32)
+    out = pred.predict_layers(h, 1)
+    assert [p.layer for p in out] == [2]
+    assert pred.predict_layers(h, 2) == []
+
+
+def test_adaptive_walk_stops_at_first_missing_layer():
+    pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=3)
+    cache = MultidimensionalCache(4, hi_slots=16, lo_slots=8, weights=LRU)
+    cache.new_sequence(); cache.advance_token()
+    h = np.random.default_rng(2).normal(size=32).astype(np.float32)
+    th = Thresholds(1.0, 1.0)  # everything high precision
+    # empty cache: layer 1 prediction must be the one returned
+    walk = pred.adaptive_walk(h, 0, cache, th)
+    assert len(walk) == 1 and walk[0][0].layer == 1
+    # admit layer-1 predictions -> walk advances to layer 2
+    for e in walk[0][0].experts:
+        cache.admit((1, e), True, 0)
+    walk2 = pred.adaptive_walk(h, 0, cache, th)
+    assert len(walk2) == 1 and walk2[0][0].layer == 2
+
+
+def test_adaptive_walk_pins_resident_predictions():
+    pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=1)
+    cache = MultidimensionalCache(4, hi_slots=4, lo_slots=2, weights=LRU)
+    cache.new_sequence(); cache.advance_token()
+    h = np.random.default_rng(3).normal(size=32).astype(np.float32)
+    preds = pred.predict_layers(h, 0, 1)
+    for e in preds[0].experts:
+        cache.admit((1, e), True, 0)
+    pred.adaptive_walk(h, 0, cache, Thresholds(1.0, 1.0))
+    for e in preds[0].experts:
+        assert ((1, e), True) in cache.pinned
+
+
+def test_accuracy_bookkeeping():
+    pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=1)
+    h = np.random.default_rng(4).normal(size=32).astype(np.float32)
+    p1 = pred.predict_layers(h, 0, 1)[0]
+    pred.record_accuracy(p1, [p1.experts[0]], distance=1)     # correct
+    pred.record_accuracy(p1, [(p1.experts[0] + 1) % 8], 1)    # wrong
+    assert pred.accuracy()[1] == pytest.approx(0.5)
+
+
+def test_stacked_prediction_matches_per_layer():
+    routers = _routers()
+    pred = AdaptiveExpertPredictor(routers, top_k=2, p=3)
+    h = np.random.default_rng(5).normal(size=32).astype(np.float32)
+    out = pred.predict_layers(h, 0)
+    for p in out:
+        logits = h @ routers[p.layer]
+        want = np.argsort(-logits)[:2]
+        assert p.experts == want.tolist()

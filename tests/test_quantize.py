@@ -1,0 +1,107 @@
+"""Unit + property tests for the groupwise quantization library."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant import (
+    QTensor, dequantize, expert_nbytes, pack_codes, quantization_error,
+    quantize, quantize_tree, unpack_codes,
+)
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_pack_unpack_roundtrip(bits):
+    rng = np.random.default_rng(0)
+    qmax = {8: 127, 4: 7, 2: 1}[bits]
+    codes = rng.integers(-qmax, qmax + 1, size=(64, 16)).astype(np.int8)
+    packed = pack_codes(jnp.asarray(codes), bits)
+    un = unpack_codes(packed, bits)
+    np.testing.assert_array_equal(np.asarray(un), codes)
+    assert packed.shape[0] == 64 // {8: 1, 4: 2, 2: 4}[bits]
+
+
+@pytest.mark.parametrize("bits,tol", [(8, 0.012), (4, 0.12), (2, 0.55)])
+@pytest.mark.parametrize("shape", [(128, 32), (256, 64), (4, 128, 8)])
+def test_quantize_reconstruction_error(bits, tol, shape):
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=shape).astype(np.float32)
+    err = quantization_error(jnp.asarray(w), bits=bits, group_size=64)
+    assert err < tol, f"bits={bits} err={err}"
+
+
+def test_quantize_exact_zero_and_scale_guard():
+    w = jnp.zeros((128, 8), jnp.float32)
+    q = quantize(w, bits=4, group_size=64)
+    np.testing.assert_array_equal(np.asarray(dequantize(q)), 0.0)
+
+
+def test_qtensor_is_pytree():
+    w = jnp.ones((128, 8), jnp.float32)
+    q = quantize(w, bits=4)
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 2
+    q2 = jax.tree_util.tree_map(lambda x: x, q)
+    assert isinstance(q2, QTensor) and q2.bits == 4
+
+
+def test_quantize_under_jit_and_vmap():
+    w = jnp.asarray(np.random.default_rng(2).normal(size=(3, 128, 16)), jnp.float32)
+    q = jax.jit(lambda x: quantize(x, bits=8, group_size=64))(w)
+    out = dequantize(q)
+    assert out.shape == w.shape
+    rel = float(jnp.linalg.norm(out - w) / jnp.linalg.norm(w))
+    assert rel < 0.02
+
+
+def test_quantize_tree_filters_small_and_int_leaves():
+    tree = {
+        "w": jnp.ones((128, 4), jnp.float32),
+        "b": jnp.ones((4,), jnp.float32),
+        "idx": jnp.ones((128, 4), jnp.int32),
+    }
+    qt = quantize_tree(tree, bits=8)
+    assert isinstance(qt["w"], QTensor)
+    assert not isinstance(qt["b"], QTensor)
+    assert not isinstance(qt["idx"], QTensor)
+
+
+def test_expert_nbytes_ordering():
+    hi = expert_nbytes(512, 2048, 16)
+    i8 = expert_nbytes(512, 2048, 8)
+    i4 = expert_nbytes(512, 2048, 4)
+    i2 = expert_nbytes(512, 2048, 2)
+    assert hi > i8 > i4 > i2
+    # int4 should be ~4x smaller than bf16 (modulo scale overhead).
+    assert hi / i4 > 3.5
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    bits=st.sampled_from([8, 4, 2]),
+    k_groups=st.integers(1, 4),
+    n=st.integers(1, 9),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_property_dequant_bounded_by_group_amax(bits, k_groups, n, seed):
+    """|dequant| never exceeds the per-group max |w| (symmetric quant invariant)."""
+    group = 32
+    k = group * k_groups
+    w = np.random.default_rng(seed).normal(size=(k, n)).astype(np.float32)
+    q = quantize(jnp.asarray(w), bits=bits, group_size=group)
+    wr = np.asarray(dequantize(q)).reshape(k_groups, group, n)
+    wg = w.reshape(k_groups, group, n)
+    amax = np.abs(wg).max(axis=1, keepdims=True)
+    assert (np.abs(wr) <= amax + 1e-5).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_error_monotone_in_bits(seed):
+    w = jnp.asarray(np.random.default_rng(seed).normal(size=(256, 16)).astype(np.float32))
+    errs = [quantization_error(w, bits=b, group_size=64) for b in (8, 4, 2)]
+    assert errs[0] <= errs[1] <= errs[2]

@@ -1,0 +1,123 @@
+"""Training substrate tests: learning progress, microbatch equivalence,
+checkpoint roundtrip, bf16-moment mode, data pipeline determinism."""
+
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.data.pipeline import DataConfig, batches, eval_batches, unigram_entropy
+from repro.models import build_model
+from repro.training import checkpoint as ckpt
+from repro.training.optimizer import OptimizerConfig, init_opt_state, lr_at
+from repro.training.train_loop import TrainState, init_state, make_train_step, train
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = smoke_variant(get_config("granite-3-2b"), layers=2, d_model=64,
+                        vocab=128)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    return build_model(cfg)
+
+
+def test_lr_schedule_shape():
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(lr_at(ocfg, 0)) == 0.0
+    assert float(lr_at(ocfg, 10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(ocfg, 100)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_training_reduces_loss(tiny):
+    dc = DataConfig(vocab_size=128, seq_len=32, batch_size=8, seed=1)
+    it = batches(dc)
+    state, hist = train(tiny, OptimizerConfig(lr=2e-3, warmup_steps=10,
+                                              total_steps=100),
+                        it, 60, log_every=59, log=lambda *_: None)
+    assert hist[-1]["nll"] < hist[0]["nll"] - 0.5
+    assert hist[-1]["nll"] < unigram_entropy(dc)
+
+
+def test_microbatched_step_matches_monolithic(tiny):
+    dc = DataConfig(vocab_size=128, seq_len=32, batch_size=8, seed=2)
+    batch = next(batches(dc))
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    s0 = init_state(tiny, seed=3)
+    mono = jax.jit(make_train_step(tiny, ocfg, microbatches=1))
+    micro = jax.jit(make_train_step(tiny, ocfg, microbatches=4))
+    s1, m1 = mono(s0, batch)
+    s2, m2 = micro(init_state(tiny, seed=3), batch)
+    assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-5)
+
+
+def test_bf16_moment_mode_trains(tiny):
+    dc = DataConfig(vocab_size=128, seq_len=32, batch_size=8, seed=4)
+    ocfg = OptimizerConfig(lr=1e-3, warmup_steps=2, total_steps=20,
+                           moment_dtype="bfloat16")
+    params = tiny.init(jax.random.PRNGKey(0))
+    state = TrainState(params, init_opt_state(params, "bfloat16"))
+    step = jax.jit(make_train_step(tiny, ocfg, microbatches=2))
+    it = batches(dc)
+    for _ in range(3):
+        state, metrics = step(state, next(it))
+    assert np.isfinite(float(metrics["loss"]))
+    assert jax.tree_util.tree_leaves(state.opt.mu)[0].dtype == jnp.bfloat16
+
+
+def test_checkpoint_roundtrip(tmp_path, tiny):
+    params = tiny.init(jax.random.PRNGKey(7))
+    state = TrainState(params, init_opt_state(params))
+    ckpt.save(str(tmp_path), state, step=5)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    restored, step = ckpt.restore(str(tmp_path), state)
+    assert step == 5
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path, tiny):
+    params = tiny.init(jax.random.PRNGKey(7))
+    ckpt.save(str(tmp_path), params, step=0)
+    bad = jax.tree_util.tree_map(lambda x: jnp.zeros((*x.shape, 2)), params)
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), bad)
+
+
+# --------------------------------------------------------------- data
+def test_data_deterministic_and_host_disjoint():
+    dc = DataConfig(vocab_size=128, seq_len=32, batch_size=8, seed=5)
+    b1 = next(batches(dc))
+    b2 = next(batches(dc))
+    np.testing.assert_array_equal(np.asarray(b1.tokens), np.asarray(b2.tokens))
+    h0 = next(batches(dc, host_id=0, num_hosts=2))
+    h1 = next(batches(dc, host_id=1, num_hosts=2))
+    assert h0.tokens.shape[0] == 4
+    assert not np.array_equal(np.asarray(h0.tokens), np.asarray(h1.tokens))
+
+
+def test_data_resume_by_step():
+    dc = DataConfig(vocab_size=128, seq_len=16, batch_size=4, seed=6)
+    it = batches(dc)
+    next(it)
+    second = next(it)
+    resumed = next(batches(dc, start_step=1))
+    np.testing.assert_array_equal(np.asarray(second.tokens),
+                                  np.asarray(resumed.tokens))
+
+
+def test_eval_batches_disjoint_from_train():
+    dc = DataConfig(vocab_size=128, seq_len=16, batch_size=4, seed=7)
+    tr = next(batches(dc))
+    ev = eval_batches(dc, 1)[0]
+    assert not np.array_equal(np.asarray(tr.tokens), np.asarray(ev.tokens))
