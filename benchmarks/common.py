@@ -84,6 +84,24 @@ def collect_trace(engine, seqs, max_len: int = 128):
     return trace, breaks
 
 
+def collect_trace_batched(engine, seqs, max_len: int = 128):
+    """Teacher-forced trace collection through the unified serving API with
+    all sequences decoding as one batch (equal-length seqs): each sequence
+    joins a slot (real prefill of its first token), then every step feeds the
+    next token column.  Token traces interleave across slots step-by-step."""
+    from repro.serving.api import HobbitBackend
+
+    backend = HobbitBackend(engine)
+    arr = np.stack([np.asarray(s, np.int64) for s in seqs])
+    b, s_len = arr.shape
+    backend.start_batch(b, max_len)
+    for r in range(b):
+        backend.join(r, arr[r, :1].astype(np.int32))
+    for t in range(1, s_len):
+        backend.step(arr[:, t].astype(np.int32))
+    return list(engine.trace)
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

@@ -40,7 +40,9 @@ def run():
         eng = OffloadEngine(model, params, EngineConfig(
             hi_slots=max(8, n_entities // 3), lo_slots=max(4, n_entities // 6),
             prefetch_p=2))
-        trace, _ = common.collect_trace(eng, seqs)
+        # all 4 eval sequences decode as ONE batch through the serving API
+        # (union-of-slots expert loading), matching the deployment scenario
+        trace = common.collect_trace_batched(eng, seqs)
         d, f = FULL_DIMS[kind]
         cfg = HobbitSimConfig(
             hi_slots=max(8, n_entities // 3), lo_slots=max(4, n_entities // 6),

@@ -1,7 +1,8 @@
-"""End-to-end serving driver (the paper's deployment scenario): batched
-requests against a small trained MoE served two ways — the resident path
-with continuous bucket batching, and the HOBBIT offload engine with a
-simulated edge-hardware latency report.
+"""End-to-end serving driver (the paper's deployment scenario): one
+continuous-batching scheduler serving the *same* mixed-length request
+workload through both backends of the unified `InferenceBackend` API —
+resident dense weights and the HOBBIT mixed-precision offload engine —
+plus a simulated edge-hardware latency report for the offload path.
 
     PYTHONPATH=src python examples/offload_serving.py
 """
@@ -21,9 +22,29 @@ from repro.core.simulator import JETSON_ORIN, RTX4090, HobbitSimConfig, simulate
 from repro.data.pipeline import DataConfig, batches
 from repro.models import build_model
 from repro.quant.quantize import expert_nbytes
+from repro.serving.api import DenseBackend, HobbitBackend
 from repro.serving.batching import BatchingServer, Request
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_loop import train
+
+
+def make_requests(rng):
+    """The paper's workload shape: short (16) and long (128) prompts with
+    mixed completion lengths, more requests than scheduler slots."""
+    reqs = []
+    for i in range(8):
+        plen = 16 if i < 4 else 128
+        reqs.append(Request(rid=i, prompt=rng.integers(0, 512, plen),
+                            max_new_tokens=16 + 16 * (i % 2)))
+    return reqs
+
+
+def serve(backend, reqs):
+    srv = BatchingServer(backend, max_batch=4, max_len=196)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    return srv
 
 
 def main():
@@ -35,21 +56,21 @@ def main():
                                             total_steps=120),
                      batches(dc), 120, log_every=60)
 
-    # ---- resident path: batched requests (paper's [16,32]/[128,32] groups)
-    srv = BatchingServer(model, state.params, max_batch=4, max_len=196)
-    rng = np.random.default_rng(0)
-    for i in range(8):
-        plen = 16 if i < 4 else 128
-        srv.submit(Request(rid=i, prompt=rng.integers(0, 512, plen),
-                           max_new_tokens=32))
-    srv.run()
-    print("resident serving:", srv.stats())
+    # ---- identical scheduler code path, identical workload, two backends
+    # (fresh rng per backend so both serve the same prompts)
+    srv = serve(DenseBackend(model, state.params),
+                make_requests(np.random.default_rng(0)))
+    print("dense backend   :", srv.stats())
 
-    # ---- HOBBIT offload path + edge-hardware latency simulation
     eng = OffloadEngine(model, state.params, EngineConfig(hi_slots=20,
                                                           lo_slots=12))
-    for i in range(2):
-        eng.generate(list(rng.integers(0, 512, 16)), 32)
+    srv = serve(HobbitBackend(eng), make_requests(np.random.default_rng(0)))
+    print("hobbit backend  :", srv.stats())
+    mid_flight = [e for e in srv.events if e[0] == "join" and e[3] > 0]
+    print(f"mid-flight admissions: {len(mid_flight)} "
+          f"(slots freed and refilled while neighbours kept decoding)")
+
+    # ---- edge-hardware latency simulation from the offload run's trace ----
     full = get_config("phi-moe")
     sim_cfg = HobbitSimConfig(
         hi_slots=20, lo_slots=12,

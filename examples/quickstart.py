@@ -18,6 +18,7 @@ from repro.configs import get_config, smoke_variant
 from repro.core import EngineConfig, OffloadEngine, Thresholds
 from repro.data.pipeline import DataConfig, batches
 from repro.models import build_model
+from repro.serving.api import HobbitBackend, generate, score_nll
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_loop import train
 
@@ -37,27 +38,31 @@ def main():
                                                total_steps=150),
                         batches(dc), 150, log_every=50)
 
-    # 3. serve through HOBBIT: expert cache smaller than the expert set,
-    #    mixed-precision loads on miss, adaptive prefetch, multidim cache
+    # 3. serve through HOBBIT behind the unified serving API: expert cache
+    #    smaller than the expert set, mixed-precision loads on miss, adaptive
+    #    prefetch, multidim cache — with a real (dense) prefill for the prompt
     eng = OffloadEngine(model, state.params, EngineConfig(
         hi_slots=10, lo_slots=6, thresholds=Thresholds(0.6, 0.9), prefetch_p=2))
-    prompt = [1, 42, 7, 99, 15, 3]
-    out = eng.generate(prompt, 24)
+    backend = HobbitBackend(eng)
+    prompt = np.asarray([[1, 42, 7, 99, 15, 3]], np.int32)
+    res = generate(backend, prompt, 24)
     s = eng.stats()
-    print(f"\nHOBBIT generated: {out}")
+    print(f"\nHOBBIT generated: {res.tokens[0, prompt.shape[1]:].tolist()}")
     print(f"cache hit ratio: {s['cache'].hit_ratio():.2f}  "
           f"loads hi/lo/skip: {s['loads_hi']}/{s['loads_lo']}/{s['skips']}")
     print(f"next-layer prediction accuracy: {s['pred_accuracy']}")
 
-    # 4. accuracy impact of mixed-precision substitution
-    toks = list(np.random.default_rng(0).integers(0, 512, 32))
-    full = OffloadEngine(model, state.params, EngineConfig(
+    # 4. accuracy impact of mixed-precision substitution, through the same
+    #    serving API (the scorer decodes teacher-forced on the offload path)
+    toks = np.random.default_rng(0).integers(0, 512, 32)
+    full = HobbitBackend(OffloadEngine(model, state.params, EngineConfig(
         hi_slots=64, lo_slots=1, thresholds=Thresholds(1.0, 1.0),
-        prefetch=False))
-    nll_full = full.score_nll(toks)
-    nll_mixed = OffloadEngine(model, state.params, EngineConfig(
-        hi_slots=64, lo_slots=32, thresholds=Thresholds(0.6, 0.9),
-        prefetch=False)).score_nll(toks)
+        prefetch=False)))
+    nll_full = score_nll(full, toks)
+    nll_mixed = score_nll(HobbitBackend(OffloadEngine(
+        model, state.params, EngineConfig(
+            hi_slots=64, lo_slots=32, thresholds=Thresholds(0.6, 0.9),
+            prefetch=False))), toks)
     print(f"\nNLL full-precision: {nll_full:.4f}   mixed int4: {nll_mixed:.4f} "
           f"(delta {100*(nll_mixed-nll_full)/nll_full:+.2f}% — paper: <=1%)")
 

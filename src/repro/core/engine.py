@@ -34,7 +34,7 @@ from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
 from repro.core.simulator import TraceLayer
 from repro.models import layers as L
 from repro.models import unstack_layers
-from repro.models.model import Model
+from repro.models.model import Batch, Model
 from repro.quant.quantize import QTensor, dequantize, expert_nbytes, quantize
 
 
@@ -115,10 +115,13 @@ class OffloadEngine:
         self.predictor = AdaptiveExpertPredictor(
             self.routers, mc.top_k, p=ecfg.prefetch_p)
 
-        # pending predictions for accuracy accounting: {moe_idx: (Prediction, dist)}
+        # pending predictions: (Prediction, made_at_layer, batch_slot)
         self._pending_preds: List = []
         self.trace: List[List[TraceLayer]] = []
         self._jit_cache: Dict[str, callable] = {}
+        self.batch = 1
+        self.max_len = 0
+        self.active = np.ones((1,), bool)
 
     # ------------------------------------------------------------------
     # device transfer
@@ -186,7 +189,12 @@ class OffloadEngine:
     # ------------------------------------------------------------------
     # decode
     # ------------------------------------------------------------------
-    def start_sequence(self, max_len: int, batch: int = 1):
+    def start_batch(self, batch: int, max_len: int):
+        """Allocate per-slot KV caches and reset serving state for a new
+        (possibly multi-request) batch.  All slots start active; continuous-
+        batching schedulers toggle individual slots via join()/release()."""
+        self.batch = batch
+        self.max_len = max_len
         self.cache.new_sequence()
         self.kv_cache = [
             {"k": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
@@ -195,14 +203,92 @@ class OffloadEngine:
                              self.cfg.resolved_head_dim), self.dtype)}
             for _ in range(self.cfg.num_layers)]
         self.positions = jnp.zeros((batch,), jnp.int32)
+        self.active = np.ones((batch,), bool)
         self.trace = []
-        self._pending_preds = []
+        self._pending_preds = []        # (Prediction, made_at_layer, slot)
 
-    def decode_token(self, token: int) -> np.ndarray:
-        """One HOBBIT decode step (batch=1).  Returns logits (V,)."""
-        cfg, ecfg = self.cfg, self.ecfg
+    def start_sequence(self, max_len: int, batch: int = 1):
+        self.start_batch(batch, max_len)
+
+    # ---------------- prefill / slot admission ----------------
+    def _prefill_fn(self):
+        key = ("prefill", self.max_len)
+        if key not in self._jit_cache:
+            max_len = self.max_len
+            self._jit_cache[key] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, max_len))
+        return self._jit_cache[key]
+
+    def _flat_decode_cache(self, cache):
+        """Flatten model.prefill's nested cache into the engine's per-layer
+        list.  Valid for the engine's model class: every layer is a full-
+        window "attn" + MoE block, so every entry is a max_len k/v pair."""
+        cfg = self.cfg
+        assert all(k == "attn" for k in cfg.layer_kinds()), cfg.layer_kinds()
+        flat = [dict(c) for c in cache["prefix"]]
+        for bi in range(cfg.num_blocks):
+            for j in range(cfg.period):
+                flat.append(jax.tree_util.tree_map(lambda a: a[bi],
+                                                   cache["blocks"][j]))
+        flat.extend(dict(c) for c in cache["tail"])
+        return flat
+
+    def prefill_batch(self, prompts) -> np.ndarray:
+        """Real prefill: run the whole prompt batch through the dense model
+        in one jitted call (prefill is compute-bound and touches every expert
+        anyway — the offload cache only serves the decode phase, matching the
+        paper's deployment), then adopt the KV cache in the engine's
+        per-layer layout.  Returns last-token logits (B, V)."""
+        prompts = np.asarray(prompts, np.int32)
+        b, s = prompts.shape
+        assert b == self.batch, (b, self.batch)
+        batch = Batch(tokens=jnp.asarray(prompts),
+                      loss_mask=jnp.ones((b, s), jnp.float32))
+        logits, cache, positions = self._prefill_fn()(self.params, batch)
+        self.kv_cache = self._flat_decode_cache(cache)
+        self.positions = positions
+        self.active[:] = True
+        return np.asarray(logits, np.float32)
+
+    def join(self, slot: int, prompt) -> np.ndarray:
+        """Admit one request into a free slot mid-flight: batch=1 prefill,
+        scatter its KV into the slot's cache rows.  Returns logits (V,)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert 0 <= slot < self.batch, (slot, self.batch)
+        batch = Batch(tokens=jnp.asarray(prompt[None]),
+                      loss_mask=jnp.ones((1, len(prompt)), jnp.float32))
+        logits, cache, positions = self._prefill_fn()(self.params, batch)
+        one = self._flat_decode_cache(cache)
+        for li in range(self.cfg.num_layers):
+            self.kv_cache[li] = jax.tree_util.tree_map(
+                lambda dst, src: dst.at[slot].set(src[0].astype(dst.dtype)),
+                self.kv_cache[li], one[li])
+        self.positions = self.positions.at[slot].set(int(positions[0]))
+        self.active[slot] = True
+        self._pending_preds = [pp for pp in self._pending_preds
+                               if pp[2] != slot]
+        return np.asarray(logits[0], np.float32)
+
+    def release(self, slot: int):
+        """Free a slot (its KV rows become junk until the next join)."""
+        self.active[slot] = False
+        self._pending_preds = [pp for pp in self._pending_preds
+                               if pp[2] != slot]
+
+    # ---------------- batched HOBBIT decode ----------------
+    def decode_step_batch(self, tokens) -> np.ndarray:
+        """One batched HOBBIT decode step.  tokens: (B,) int32; returns
+        logits (B, V).  Inactive slots ride through attention (their rows
+        are junk and cheap) but take no part in gating, expert loading,
+        expert compute, the trace, or position advancement.  Expert loading
+        is the union of all active slots' demands; precision decisions stay
+        per-slot, so each slot's numerics match its own batch=1 run."""
+        cfg, ecfg, mc = self.cfg, self.ecfg, self.cfg.moe
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        assert tokens.shape[0] == self.batch, (tokens.shape, self.batch)
+        rows = [r for r in range(self.batch) if self.active[r]]
         self.cache.advance_token()
-        tok = jnp.asarray([[token]], jnp.int32)
+        tok = jnp.asarray(tokens[:, None])
         x = jnp.take(self.params["embed"], tok, axis=0)
         if cfg.scale_embedding:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
@@ -212,85 +298,120 @@ class OffloadEngine:
         hi_exp = self._jit("hi", self._hi_expert)
         lo_exp = self._jit("lo", self._lo_expert)
 
-        token_trace: List[TraceLayer] = []
-        mc = cfg.moe
+        row_trace = {r: [] for r in rows}
         for mi, li in enumerate(self.moe_layers):
             p = self.layer_params[li]
             x, self.kv_cache[li] = attn_step(p, x, self.kv_cache[li], self.positions)
-            h = ffn_in(p, x)                                   # (1,1,D)
-            h_host = np.asarray(h[0, 0], np.float32)
+            h = ffn_in(p, x)                                   # (B,1,D)
+            h_host = np.asarray(h[:, 0], np.float32)           # (B,D)
 
-            # ---- gate (the paper's Expert Scorer input) ----
-            logits = h_host @ self.routers[mi]
-            probs = np.exp(logits - logits.max())
-            probs /= probs.sum()
-            top = np.argsort(-probs)[: mc.top_k]
-            gate_vals = probs[top]
+            # ---- gate (the paper's Expert Scorer input), per slot ----
+            tops: Dict[int, np.ndarray] = {}
+            gates: Dict[int, np.ndarray] = {}
+            for r in rows:
+                logits = h_host[r] @ self.routers[mi]
+                probs = np.exp(logits - logits.max())
+                probs /= probs.sum()
+                tops[r] = np.argsort(-probs)[: mc.top_k]
+                gates[r] = probs[tops[r]]
 
             # ---- score accuracy of earlier predictions for this layer ----
             still_pending = []
-            for pred, made_at in self._pending_preds:
+            for pred, made_at, r in self._pending_preds:
                 if pred.layer == mi:
-                    self.predictor.record_accuracy(pred, top.tolist(),
-                                                   mi - made_at)
+                    if r in tops:
+                        self.predictor.record_accuracy(pred, tops[r].tolist(),
+                                                       mi - made_at)
                 elif pred.layer > mi:
-                    still_pending.append((pred, made_at))
+                    still_pending.append((pred, made_at, r))
             self._pending_preds = still_pending
 
             # ---- adaptive prefetch for subsequent layers (§3.3) ----
-            pred_entry = None
+            pred_entry: Dict[int, object] = {}
             if ecfg.prefetch:
-                walk = self.predictor.adaptive_walk(h_host, mi, self.cache,
-                                                    self.loader.th)
-                for pr, dec in walk:
-                    self.loader.enqueue_prefetch(pr.layer, pr.experts, dec)
-                    self._pending_preds.append((pr, mi))
-                    pred_entry = pr
-                # also record plain next-layer prediction for trace/sim
-                nxt = self.predictor.predict_layers(h_host, mi, 1)
-                if nxt:
-                    self._pending_preds.append((nxt[0], mi))
-                    pred_entry = nxt[0]
+                for r in rows:
+                    walk = self.predictor.adaptive_walk(h_host[r], mi,
+                                                        self.cache, self.loader.th)
+                    for pr, dec in walk:
+                        self.loader.enqueue_prefetch(pr.layer, pr.experts, dec)
+                        self._pending_preds.append((pr, mi, r))
+                        pred_entry[r] = pr
+                    # also record plain next-layer prediction for trace/sim
+                    nxt = self.predictor.predict_layers(h_host[r], mi, 1)
+                    if nxt:
+                        self._pending_preds.append((nxt[0], mi, r))
+                        pred_entry[r] = nxt[0]
 
-            # ---- on-demand scoring + loading ----
-            report = self.loader.score_and_enqueue(mi, top.tolist(), gate_vals)
+            # ---- on-demand scoring + loading (union over slots) ----
+            self.loader.new_layer()
+            for r in rows:
+                self.loader.score_and_enqueue(mi, tops[r].tolist(), gates[r],
+                                              clear_pins=False)
             self.loader.drain(mi)
 
-            # ---- expert compute from cache slots ----
-            dec = precision_decisions(gate_vals, self.loader.th)
-            y = jnp.zeros_like(h)
-            wsum = 0.0
-            for e, d_, w in zip(top, dec, gate_vals):
-                if d_ == PREC_SKIP:
+            # ---- expert compute from cache slots, per slot ----
+            y_rows = []
+            for r in range(self.batch):
+                if r not in row_trace:
+                    y_rows.append(jnp.zeros_like(h[r : r + 1]))
                     continue
-                is_hi = d_ == PREC_HI
-                slot = self.cache.lookup((mi, e), is_hi)
-                assert slot is not None, (mi, e, is_hi)
-                if self.ecfg.compute_mode == "host":
-                    out = self._host_expert(mi, int(e), d_, np.asarray(h, np.float32))
-                    out = jnp.asarray(out, h.dtype)
-                elif is_hi:
-                    out = hi_exp(self.pool_hi["wi"][slot], self.pool_hi["wo"][slot], h)
-                else:
-                    out = lo_exp(self.pool_lo["wi_data"][slot],
-                                 self.pool_lo["wi_scale"][slot],
-                                 self.pool_lo["wo_data"][slot],
-                                 self.pool_lo["wo_scale"][slot], h)
-                y = y + float(w) * out.astype(jnp.float32)
-                wsum += float(w)
-            if wsum > 0:
-                y = y / wsum                                    # renormalize (skips)
-            x = x + y.astype(x.dtype)
+                hr = h[r : r + 1]
+                dec = precision_decisions(gates[r], self.loader.th)
+                y = jnp.zeros_like(hr)
+                wsum = 0.0
+                for e, d_, w in zip(tops[r], dec, gates[r]):
+                    if d_ == PREC_SKIP:
+                        continue
+                    is_hi = d_ == PREC_HI
+                    slot = self.cache.lookup((mi, e), is_hi)
+                    if slot is None:
+                        # a same-layer neighbour's admission evicted this
+                        # expert (union demand > pool) — reload on demand,
+                        # and count the re-fetch as a miss so hit_ratio
+                        # reflects real traffic under contention
+                        if is_hi:
+                            self.cache.stats.misses_hi += 1
+                        else:
+                            self.cache.stats.misses_lo += 1
+                        slot, _ = self.cache.admit((mi, int(e)), is_hi, mi)
+                        self._fetch(mi, int(e), int(d_), slot)
+                        self.loader.loaded_bytes += self.expert_bytes[int(d_)]
+                        self.loader.n_loads[int(d_)] += 1
+                    if self.ecfg.compute_mode == "host":
+                        out = self._host_expert(mi, int(e), d_,
+                                                np.asarray(hr, np.float32))
+                        out = jnp.asarray(out, hr.dtype)
+                    elif is_hi:
+                        out = hi_exp(self.pool_hi["wi"][slot],
+                                     self.pool_hi["wo"][slot], hr)
+                    else:
+                        out = lo_exp(self.pool_lo["wi_data"][slot],
+                                     self.pool_lo["wi_scale"][slot],
+                                     self.pool_lo["wo_data"][slot],
+                                     self.pool_lo["wo_scale"][slot], hr)
+                    y = y + float(w) * out.astype(jnp.float32)
+                    wsum += float(w)
+                if wsum > 0:
+                    y = y / wsum                                # renormalize (skips)
+                y_rows.append(y)
+                pe = pred_entry.get(r)
+                row_trace[r].append(TraceLayer(
+                    experts=tops[r].tolist(), gate_vals=gates[r],
+                    pred_experts=pe.experts if (pe and pe.layer == mi + 1) else None,
+                    pred_gate_vals=pe.gate_vals if (pe and pe.layer == mi + 1) else None))
+            x = x + jnp.concatenate(y_rows, axis=0).astype(x.dtype)
 
-            token_trace.append(TraceLayer(
-                experts=top.tolist(), gate_vals=gate_vals,
-                pred_experts=pred_entry.experts if (pred_entry and pred_entry.layer == mi + 1) else None,
-                pred_gate_vals=pred_entry.gate_vals if (pred_entry and pred_entry.layer == mi + 1) else None))
-
-        self.positions = self.positions + 1
-        self.trace.append(token_trace)
-        lg = self.model.logits(self.params, x)[0, 0]
+        self.positions = self.positions + jnp.asarray(
+            self.active.astype(np.int32))
+        for r in rows:
+            self.trace.append(row_trace[r])
+        lg = self.model.logits(self.params, x)[:, 0]
         return np.asarray(lg, np.float32)
+
+    def decode_token(self, token: int) -> np.ndarray:
+        """One HOBBIT decode step (batch=1 legacy API).  Returns logits (V,)."""
+        assert self.batch == 1, "decode_token is batch=1; use decode_step_batch"
+        return self.decode_step_batch(np.asarray([int(token)], np.int32))[0]
 
     def _host_expert(self, mi, e, d_, h):
         """CPU-GPU cooperative mode (§4): run the expert on host weights."""

@@ -58,13 +58,23 @@ class DynamicExpertLoader:
         self.n_skips = 0
 
     # ---------------- Expert Scorer ----------------
+    def new_layer(self):
+        """Reset hard pins at a layer boundary.  Batched decoding calls this
+        once per layer, then scores every slot's expert set with
+        ``clear_pins=False`` so the union of all slots' experts stays
+        protected while the layer executes."""
+        self.cache.hard_pinned.clear()
+
     def score_and_enqueue(self, layer: int, experts: List[int],
-                          gate_vals: np.ndarray) -> LoadReport:
-        """Handle the on-demand expert set of one MoE layer for one token."""
+                          gate_vals: np.ndarray, *,
+                          clear_pins: bool = True) -> LoadReport:
+        """Handle the on-demand expert set of one MoE layer for one token
+        (one batch slot)."""
         dec = precision_decisions(gate_vals, self.th)
         # hard pins protect only the layer being executed; earlier layers'
         # experts already ran and may be evicted again
-        self.cache.hard_pinned.clear()
+        if clear_pins:
+            self.cache.hard_pinned.clear()
         tasks, skipped, hits = [], [], []
         for e, d in zip(experts, dec):
             if d == PREC_SKIP:

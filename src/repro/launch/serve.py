@@ -1,7 +1,20 @@
-"""Serving launcher: standard resident serving or the HOBBIT offload engine.
+"""Serving launcher over the unified `InferenceBackend` API.
 
+Both the resident dense path and the HOBBIT mixed-precision offload engine
+sit behind the same protocol, so one launcher drives either — single-shot
+generation or a continuous-batching request workload:
+
+  # dense, one batched generate call
   PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
-      --mode hobbit --prompt-len 16 --new-tokens 32
+      --backend dense --prompt-len 16 --new-tokens 32
+
+  # HOBBIT offload + simulated edge-hardware latency report
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
+      --backend hobbit --prompt-len 16 --new-tokens 32
+
+  # continuous batching: mixed-length requests through the scheduler
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke \
+      --backend hobbit --serve-requests 6 --max-batch 2
 """
 
 import argparse
@@ -17,19 +30,40 @@ from repro.core import EngineConfig, OffloadEngine, Thresholds
 from repro.core.simulator import HARDWARE, HobbitSimConfig, simulate_systems
 from repro.models import build_model
 from repro.quant.quantize import expert_nbytes
-from repro.serving.decode import generate
+from repro.serving.api import generate, make_backend
+from repro.serving.batching import BatchingServer, Request
 from repro.training import checkpoint as ckpt
 
 
 def main():
-    ap = argparse.ArgumentParser()
+    ap = argparse.ArgumentParser(
+        description="Serve a MoE model through the unified InferenceBackend "
+                    "API: --backend dense keeps all weights resident; "
+                    "--backend hobbit decodes through the mixed-precision "
+                    "expert-offloading engine.  Either backend runs "
+                    "single-shot generation or, with --serve-requests, a "
+                    "continuous-batching workload through the same "
+                    "scheduler.")
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--mode", choices=["resident", "hobbit"], default="resident")
+    ap.add_argument("--backend", choices=["dense", "hobbit"], default=None,
+                    help="inference backend behind the serving API "
+                         "(default: dense)")
+    ap.add_argument("--mode", choices=["resident", "hobbit"], default=None,
+                    help="DEPRECATED alias for --backend "
+                         "(resident -> dense)")
     ap.add_argument("--ckpt-dir", type=str, default=None)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--new-tokens", type=int, default=32)
-    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--batch", type=int, default=1,
+                    help="batch size for single-shot generation "
+                         "(both backends support batch >= 1)")
+    ap.add_argument("--serve-requests", type=int, default=0,
+                    help="if > 0, run N mixed-length requests through the "
+                         "continuous-batching scheduler instead of one "
+                         "generate call")
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="scheduler slots for --serve-requests")
     ap.add_argument("--hi-slots", type=int, default=16)
     ap.add_argument("--lo-slots", type=int, default=8)
     ap.add_argument("--t1", type=float, default=0.6)
@@ -37,6 +71,9 @@ def main():
     ap.add_argument("--hw", choices=list(HARDWARE), default="rtx4090",
                     help="hardware cost model for the simulated latency report")
     args = ap.parse_args()
+
+    kind = args.backend or {"resident": "dense", "hobbit": "hobbit",
+                            None: "dense"}[args.mode]
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -47,41 +84,55 @@ def main():
     if args.ckpt_dir:
         params, _ = ckpt.restore(args.ckpt_dir, params)
 
+    if kind == "hobbit":
+        assert cfg.moe is not None, "--backend hobbit requires a MoE arch"
+    backend = make_backend(kind, model, params, engine_config=EngineConfig(
+        hi_slots=args.hi_slots, lo_slots=args.lo_slots,
+        thresholds=Thresholds(args.t1, args.t2)) if kind == "hobbit" else None)
+
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    report = {"backend": kind}
 
-    if args.mode == "resident":
-        res = generate(model, params, prompts, args.new_tokens)
-        print(json.dumps({"prefill_s": res.prefill_s, "decode_s": res.decode_s,
-                          "decode_tok_s": res.decode_tok_s,
-                          "tokens": res.tokens[0, -8:].tolist()}))
-        return
+    if args.serve_requests > 0:
+        srv = BatchingServer(backend, max_batch=args.max_batch,
+                             max_len=args.prompt_len * 2 + args.new_tokens + 8)
+        for i in range(args.serve_requests):
+            plen = args.prompt_len * (1 + i % 2)
+            srv.submit(Request(
+                rid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+                max_new_tokens=args.new_tokens // (1 + i % 2)))
+        srv.run()
+        report["serving"] = srv.stats()
+    else:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
+            jnp.int32)
+        res = generate(backend, prompts, args.new_tokens)
+        report.update({"prefill_s": res.prefill_s, "decode_s": res.decode_s,
+                       "decode_tok_s": res.decode_tok_s,
+                       "tokens": res.tokens[0, -8:].tolist()})
 
-    assert cfg.moe is not None, "--mode hobbit requires a MoE arch"
-    eng = OffloadEngine(model, params, EngineConfig(
-        hi_slots=args.hi_slots, lo_slots=args.lo_slots,
-        thresholds=Thresholds(args.t1, args.t2)))
-    out = eng.generate(list(map(int, prompts[0])), args.new_tokens)
-    stats = eng.stats()
-    hw = HARDWARE[args.hw]
-    base = get_config(args.arch)  # full-scale dims for the latency model
-    sim_cfg = HobbitSimConfig(
-        thresholds=Thresholds(args.t1, args.t2),
-        hi_slots=args.hi_slots, lo_slots=args.lo_slots,
-        hi_bytes=expert_nbytes(base.d_model, base.moe.d_ff_expert, 16),
-        lo_bytes=expert_nbytes(base.d_model, base.moe.d_ff_expert, 4))
-    sim = simulate_systems(eng.trace, eng.num_moe_layers, hw, sim_cfg)
-    print(json.dumps({
-        "generated": out[-8:],
-        "cache_hit_ratio": round(stats["cache"].hit_ratio(), 3),
-        "loads": {"hi": stats["loads_hi"], "lo": stats["loads_lo"],
-                  "skips": stats["skips"]},
-        "pred_accuracy": stats["pred_accuracy"],
-        "simulated_decode_tok_s": {k: round(v["tok_per_s"], 2)
-                                   for k, v in sim.items()},
-        "hw_profile": hw.name,
-    }, default=str))
+    if kind == "hobbit":
+        eng: OffloadEngine = backend.engine
+        stats = eng.stats()
+        hw = HARDWARE[args.hw]
+        base = get_config(args.arch)  # full-scale dims for the latency model
+        sim_cfg = HobbitSimConfig(
+            thresholds=Thresholds(args.t1, args.t2),
+            hi_slots=args.hi_slots, lo_slots=args.lo_slots,
+            hi_bytes=expert_nbytes(base.d_model, base.moe.d_ff_expert, 16),
+            lo_bytes=expert_nbytes(base.d_model, base.moe.d_ff_expert, 4))
+        sim = simulate_systems(eng.trace, eng.num_moe_layers, hw, sim_cfg)
+        report.update({
+            "cache_hit_ratio": round(stats["cache"].hit_ratio(), 3),
+            "loads": {"hi": stats["loads_hi"], "lo": stats["loads_lo"],
+                      "skips": stats["skips"]},
+            "pred_accuracy": stats["pred_accuracy"],
+            "simulated_decode_tok_s": {k: round(v["tok_per_s"], 2)
+                                       for k, v in sim.items()},
+            "hw_profile": hw.name,
+        })
+    print(json.dumps(report, default=str))
 
 
 if __name__ == "__main__":

@@ -97,8 +97,9 @@ def _layer_forward(p, x, positions, cfg: ModelConfig, kind: str, is_moe: bool,
 
 
 def _layer_decode(p, x, cache, positions, cfg: ModelConfig, kind: str,
-                  is_moe: bool, enc_kv=None):
-    """One-token layer step. Returns (x, new_cache)."""
+                  is_moe: bool, enc_kv=None, token_mask=None):
+    """One-token layer step. Returns (x, new_cache).  token_mask: optional
+    (B,) live-slot mask — dead slots take no MoE dispatch capacity."""
     h = layers.apply_norm(p["pre_norm"], x, cfg)
     if kind.startswith("attn"):
         if cfg.mla is not None:
@@ -119,7 +120,8 @@ def _layer_decode(p, x, cache, positions, cfg: ModelConfig, kind: str,
     if "ffn" in p:
         h = layers.apply_norm(p["ffn_norm"], x, cfg)
         if is_moe:
-            y, _, _ = moe_lib.moe_forward(p["ffn"], h, cfg)
+            y, _, _ = moe_lib.moe_forward(p["ffn"], h, cfg,
+                                          token_mask=token_mask)
         else:
             y = layers.ffn_forward(p["ffn"], h, cfg)
         if cfg.sandwich_norm:
@@ -428,9 +430,11 @@ class Model:
         ekv = cache["enc_kv"][layer_idx]
         return (ekv[0], ekv[1])
 
-    def decode_step(self, params, cache, tokens, positions):
-        """tokens: (B,1) int32; positions: (B,) write index. Returns
-        (logits (B, V), new_cache)."""
+    def decode_step(self, params, cache, tokens, positions, active=None):
+        """tokens: (B,1) int32; positions: (B,) write index; active: optional
+        (B,) live-slot mask (continuous batching: rows of released slots stay
+        in the batch for shape stability but must not consume MoE dispatch
+        capacity).  Returns (logits (B, V), new_cache)."""
         cfg = self.cfg
         x = jnp.take(params["embed"], tokens, axis=0)
         if cfg.scale_embedding:
@@ -446,7 +450,8 @@ class Model:
         new_cache = {"prefix": [], "tail": []}
         for p, c in zip(params["prefix"], cache["prefix"]):
             x, nc = _layer_decode(p, x, c, positions, cfg, kinds[li], moes[li],
-                                  enc_kv=self._cross_kv_from_cache(cache, li))
+                                  enc_kv=self._cross_kv_from_cache(cache, li),
+                                  token_mask=active)
             new_cache["prefix"].append(nc)
             li += 1
 
@@ -472,7 +477,7 @@ class Model:
                             a, bi, 0, keepdims=False), cache_st[j])
                     x, ncj = _layer_decode(bp[j], x, bc_j, positions, cfg,
                                            cfg.block_pattern[j], cfg.moe_pattern[j],
-                                           enc_kv=ekv)
+                                           enc_kv=ekv, token_mask=active)
                     cache_st[j] = jax.tree_util.tree_map(
                         lambda a, u: jax.lax.dynamic_update_index_in_dim(
                             a, u.astype(a.dtype), bi, 0), cache_st[j], ncj)
@@ -489,7 +494,8 @@ class Model:
         for p, c, kind, is_moe in zip(params["tail"], cache["tail"],
                                       cfg.tail_pattern, cfg.tail_moe):
             x, nc = _layer_decode(p, x, c, positions, cfg, kind, is_moe,
-                                  enc_kv=self._cross_kv_from_cache(cache, li))
+                                  enc_kv=self._cross_kv_from_cache(cache, li),
+                                  token_mask=active)
             new_cache["tail"].append(nc)
             li += 1
 

@@ -74,15 +74,24 @@ def _capacity(t: int, mc: MoEConfig) -> int:
     return max(8, -(-c // 8) * 8)  # round up to 8 for tiling friendliness
 
 
-def dispatch_indices(top_idx, mc: MoEConfig, capacity: int):
-    """(T,k) expert ids -> (T,k) buffer slots in [0, E*C] (E*C = dropped)."""
+def dispatch_indices(top_idx, mc: MoEConfig, capacity: int, token_mask=None):
+    """(T,k) expert ids -> (T,k) buffer slots in [0, E*C] (E*C = dropped).
+
+    token_mask: optional (T,) live-token mask.  Dead tokens (e.g. inactive
+    batch slots riding through a decode step) occupy no expert capacity and
+    combine with weight 0, so they can never crowd live tokens out."""
     t, k = top_idx.shape
     e = mc.num_experts
     flat = top_idx.reshape(t * k)
     onehot = jax.nn.one_hot(flat, e, dtype=jnp.int32)          # (T*k, E)
+    if token_mask is not None:
+        live = jnp.repeat(token_mask.astype(jnp.int32), k)
+        onehot = onehot * live[:, None]
     pos = jnp.cumsum(onehot, axis=0) - 1                        # arrival index
     pos = jnp.sum(pos * onehot, axis=-1)                        # (T*k,)
     keep = pos < capacity
+    if token_mask is not None:
+        keep = keep & (live > 0)
     slot = jnp.where(keep, flat * capacity + pos, e * capacity)
     return slot.reshape(t, k), keep.reshape(t, k)
 
@@ -127,7 +136,7 @@ def expert_ffn(experts, xb, cfg: ModelConfig, tok_ax=None, groups: int = 1):
 
 
 def moe_forward(p, x, cfg: ModelConfig, router_out: Optional[RouterOutput] = None,
-                groups: Optional[int] = None):
+                groups: Optional[int] = None, token_mask=None):
     """x: (B, S, D).  Returns (y, aux_loss, router_out).
 
     GShard-style *grouped* dispatch: tokens are split into G groups (G = the
@@ -156,8 +165,13 @@ def moe_forward(p, x, cfg: ModelConfig, router_out: Optional[RouterOutput] = Non
     e_ax = "model" if e % max(shard_utils.axis_size("model"), 1) == 0 else None
 
     top_idx_g = r.top_idx.reshape(g, tl, mc.top_k)
-    slot, keep = jax.vmap(
-        lambda ti: dispatch_indices(ti, mc, cap))(top_idx_g)     # (G, tl, k)
+    if token_mask is not None:
+        mask_g = jnp.asarray(token_mask).reshape(g, tl)
+        slot, keep = jax.vmap(
+            lambda ti, mk: dispatch_indices(ti, mc, cap, mk))(top_idx_g, mask_g)
+    else:
+        slot, keep = jax.vmap(
+            lambda ti: dispatch_indices(ti, mc, cap))(top_idx_g)  # (G, tl, k)
 
     # inverse slot map per group: slot -> local token row (tl = pad row);
     # scattering 1-D indices then row-gathering avoids the giant 2-D scatter

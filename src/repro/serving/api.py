@@ -1,0 +1,262 @@
+"""Unified serving API: one `InferenceBackend` protocol in front of both the
+dense (resident-weights) decode path and the HOBBIT mixed-precision expert
+offloading engine, so schedulers, launchers, examples and benchmarks drive a
+single interface regardless of where the experts live.
+
+The protocol is slot-oriented to support *continuous batching*
+(`serving.batching.BatchingServer`): a backend holds `batch` KV-cache slots,
+a finished request `release()`s its slot mid-flight, and a queued request
+`join()`s the freed slot at the next step without disturbing its neighbours.
+
+    backend methods
+    ---------------
+    start_batch(batch, max_len)      allocate B slots (all marked active)
+    prefill(prompts (B,S)) -> (B,V)  full-batch prefill, last-token logits
+    join(slot, prompt (S,)) -> (V,)  admit one request into a slot mid-flight
+    release(slot)                    free a slot (junk rows until next join)
+    step(tokens (B,)) -> (B,V)       one decode step for the whole batch
+    stats() -> dict                  backend-specific counters
+
+Usage::
+
+    from repro.serving.api import DenseBackend, HobbitBackend, generate
+    from repro.core import EngineConfig, OffloadEngine
+
+    backend = DenseBackend(model, params)                  # resident weights
+    res = generate(backend, prompts, new_tokens=32)        # same helper...
+
+    eng = OffloadEngine(model, params, EngineConfig(hi_slots=16, lo_slots=8))
+    res = generate(HobbitBackend(eng), prompts, 32)        # ...either way
+
+`generate` / `score_nll` here are thin helpers over the protocol; the
+continuous-batching scheduler lives in `serving.batching`.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Batch, Model
+from repro.serving.decode import (GenerateResult, make_prefill_step,
+                                  sample_token)
+
+
+@runtime_checkable
+class InferenceBackend(Protocol):
+    """Slot-oriented decode interface served by the continuous scheduler."""
+
+    model: Model
+
+    def start_batch(self, batch: int, max_len: int) -> None: ...
+
+    def prefill(self, prompts: np.ndarray) -> np.ndarray: ...
+
+    def join(self, slot: int, prompt: np.ndarray) -> np.ndarray: ...
+
+    def release(self, slot: int) -> None: ...
+
+    def step(self, tokens: np.ndarray) -> np.ndarray: ...
+
+    def stats(self) -> dict: ...
+
+
+# --------------------------------------------------------------------------
+# dense (resident-weights) backend
+# --------------------------------------------------------------------------
+
+def _scatter_slot(dst_cache, src_cache, slot: int):
+    """Write a batch=1 prefill cache into row `slot` of a batched cache.
+
+    The nested decode-cache layout puts the batch axis at 0 for prefix/tail
+    entries, 1 for scanned-block entries (stacked (num_blocks, B, ...)), and
+    2 for the whisper enc_kv buffer."""
+
+    def ax0(b, o):
+        return b.at[slot].set(o[0].astype(b.dtype))
+
+    def ax1(b, o):
+        return b.at[:, slot].set(o[:, 0].astype(b.dtype))
+
+    tmap = jax.tree_util.tree_map
+    out = {
+        "prefix": [tmap(ax0, b, o) for b, o in
+                   zip(dst_cache["prefix"], src_cache["prefix"])],
+        "blocks": [tmap(ax1, b, o) for b, o in
+                   zip(dst_cache["blocks"], src_cache["blocks"])],
+        "tail": [tmap(ax0, b, o) for b, o in
+                 zip(dst_cache["tail"], src_cache["tail"])],
+    }
+    if "enc_kv" in dst_cache:
+        out["enc_kv"] = dst_cache["enc_kv"].at[:, :, slot].set(
+            src_cache["enc_kv"][:, :, 0].astype(dst_cache["enc_kv"].dtype))
+    return out
+
+
+class DenseBackend:
+    """All weights resident on device; jitted prefill + decode step."""
+
+    def __init__(self, model: Model, params, *, jit: bool = True):
+        self.model = model
+        self.params = params
+        self._jit = jit
+
+        def step(params, cache, tokens, positions, active):
+            # active mask: released slots must not consume MoE dispatch
+            # capacity (their junk rows would crowd live tokens at batch > 8)
+            return model.decode_step(params, cache, tokens, positions,
+                                     active=active)
+
+        self._step = jax.jit(step, donate_argnums=1) if jit else step
+        self._prefill_fns = {}          # max_len -> (jitted) prefill
+        self.batch = 0
+        self.max_len = 0
+
+    def _prefill(self, max_len: int):
+        if max_len not in self._prefill_fns:
+            fn = make_prefill_step(self.model, max_len)
+            self._prefill_fns[max_len] = jax.jit(fn) if self._jit else fn
+        return self._prefill_fns[max_len]
+
+    def start_batch(self, batch: int, max_len: int) -> None:
+        self.batch, self.max_len = batch, max_len
+        self.cache = self.model.init_cache(batch, max_len)
+        self.positions = jnp.zeros((batch,), jnp.int32)
+        self.active = np.ones((batch,), bool)
+
+    def prefill(self, prompts) -> np.ndarray:
+        prompts = jnp.asarray(np.asarray(prompts, np.int32))
+        batch = Batch(tokens=prompts, loss_mask=jnp.ones(prompts.shape))
+        logits, self.cache, self.positions = self._prefill(self.max_len)(
+            self.params, batch)
+        self.active[:] = True
+        return np.asarray(logits, np.float32)
+
+    def join(self, slot: int, prompt) -> np.ndarray:
+        prompt = jnp.asarray(np.asarray(prompt, np.int32).reshape(1, -1))
+        batch = Batch(tokens=prompt, loss_mask=jnp.ones(prompt.shape))
+        logits, one_cache, positions = self._prefill(self.max_len)(
+            self.params, batch)
+        self.cache = _scatter_slot(self.cache, one_cache, slot)
+        self.positions = self.positions.at[slot].set(int(positions[0]))
+        self.active[slot] = True
+        return np.asarray(logits[0], np.float32)
+
+    def release(self, slot: int) -> None:
+        self.active[slot] = False
+
+    def step(self, tokens) -> np.ndarray:
+        tokens = jnp.asarray(np.asarray(tokens, np.int32).reshape(-1, 1))
+        logits, self.cache = self._step(self.params, self.cache, tokens,
+                                        self.positions,
+                                        jnp.asarray(self.active))
+        # only active slots advance; freed slots idle at their last position
+        self.positions = self.positions + jnp.asarray(
+            self.active.astype(np.int32))
+        return np.asarray(logits, np.float32)
+
+    def stats(self) -> dict:
+        return {"backend": "dense", "batch": self.batch,
+                "max_len": self.max_len}
+
+
+# --------------------------------------------------------------------------
+# HOBBIT offload backend
+# --------------------------------------------------------------------------
+
+class HobbitBackend:
+    """`OffloadEngine` behind the protocol: batched mixed-precision decode
+    with union-of-slots expert loading and a real (dense, compute-bound)
+    prefill path."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.model = engine.model
+
+    def start_batch(self, batch: int, max_len: int) -> None:
+        self.engine.start_batch(batch, max_len)
+
+    def prefill(self, prompts) -> np.ndarray:
+        return self.engine.prefill_batch(prompts)
+
+    def join(self, slot: int, prompt) -> np.ndarray:
+        return self.engine.join(slot, prompt)
+
+    def release(self, slot: int) -> None:
+        self.engine.release(slot)
+
+    def step(self, tokens) -> np.ndarray:
+        return self.engine.decode_step_batch(tokens)
+
+    def stats(self) -> dict:
+        s = dict(self.engine.stats())
+        s["backend"] = "hobbit"
+        return s
+
+
+def make_backend(kind: str, model: Model, params, *, engine_config=None,
+                 jit: bool = True):
+    """Factory for launchers: kind in {"dense", "hobbit"}."""
+    if kind == "dense":
+        return DenseBackend(model, params, jit=jit)
+    if kind == "hobbit":
+        from repro.core.engine import EngineConfig, OffloadEngine
+        eng = OffloadEngine(model, params, engine_config or EngineConfig())
+        return HobbitBackend(eng)
+    raise ValueError(f"unknown backend kind: {kind!r}")
+
+
+# --------------------------------------------------------------------------
+# protocol-level helpers (generate / score_nll for any backend)
+# --------------------------------------------------------------------------
+
+def generate(backend: InferenceBackend, prompts, new_tokens: int, *,
+             max_len: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0) -> GenerateResult:
+    """Greedy/temperature generation through any backend.  prompts: (B, S)."""
+    prompts = np.asarray(prompts, np.int32)
+    b, s = prompts.shape
+    max_len = max_len or (s + new_tokens + 1)
+    backend.start_batch(b, max_len)
+
+    t0 = time.time()
+    lg = backend.prefill(prompts)
+    t1 = time.time()
+
+    key = jax.random.PRNGKey(seed)
+    out = [prompts]
+    tok = np.asarray(sample_token(jnp.asarray(lg), key, temperature))
+    for i in range(new_tokens):
+        out.append(np.asarray(tok)[:, None])
+        if i == new_tokens - 1:
+            break
+        key, sub = jax.random.split(key)
+        lg = backend.step(tok)
+        tok = np.asarray(sample_token(jnp.asarray(lg), sub, temperature))
+    t2 = time.time()
+    return GenerateResult(np.concatenate(out, axis=1), t1 - t0, t2 - t1,
+                          new_tokens)
+
+
+def score_nll(backend: InferenceBackend, tokens, *,
+              max_len: Optional[int] = None) -> float:
+    """Teacher-forced mean NLL through any backend's decode path (the first
+    token enters via a 1-token join/prefill; every later token is a decode
+    step, so offload backends are exercised on their serving path)."""
+    tokens = [int(t) for t in np.asarray(tokens).reshape(-1)]
+    max_len = max_len or (len(tokens) + 1)
+    backend.start_batch(1, max_len)
+    lg = backend.join(0, np.asarray(tokens[:1], np.int32))
+    nll, n = 0.0, 0
+    for t in tokens[1:]:
+        p = np.asarray(lg, np.float64)
+        p -= p.max()
+        p -= np.log(np.exp(p).sum())
+        nll -= p[t]
+        n += 1
+        lg = backend.step(np.asarray([t], np.int32))[0]
+    return float(nll / max(n, 1))

@@ -1,25 +1,30 @@
-"""Request batching for the serving path.
+"""Continuous batching for the serving path, backend-agnostic.
 
-Requests are bucketed by exact prompt length (the paper's workload uses
-fixed prompt lengths of 16 / 128) and served as fixed batches; per-request
-latency statistics are tracked.  Decode supports per-slot positions, so
-mixed-completion-length batches finish independently (a slot's output is
-truncated at its own max_new_tokens).
+The scheduler owns `max_batch` slots on an `InferenceBackend` (dense or
+HOBBIT-offload — identical code path).  Requests queue FIFO; a request is
+admitted into any free slot via `backend.join` (its own prefill), decodes
+together with whatever else is in flight, and on completion `release`s the
+slot so the next queued request joins at the very next step — no bucketing
+by prompt length and no waiting for batch-mates to finish.
+
+Per-request latency is split into queue wait / prefill / decode so the
+reported `decode_tok_s` measures decode steps only (queue wait and prefill
+are reported separately).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Batch, Model
-from repro.serving.decode import make_prefill_step, make_serve_step, sample_token
+from repro.models.model import Model
+from repro.serving.api import DenseBackend, InferenceBackend
+from repro.serving.decode import sample_token
 
 
 @dataclasses.dataclass
@@ -30,77 +35,121 @@ class Request:
     submitted_at: float = 0.0
     # filled on completion:
     output: Optional[np.ndarray] = None
-    prefill_latency_s: float = 0.0
+    queue_wait_s: float = 0.0       # submit -> admission into a slot
+    prefill_latency_s: float = 0.0  # this request's own prefill (join) time
+    decode_s: float = 0.0           # wall time of decode steps it rode in
     total_latency_s: float = 0.0
 
 
 class BatchingServer:
-    """Bucket-by-length static batching with a jitted decode step per shape."""
+    """Slot-based continuous batching over any `InferenceBackend`.
 
-    def __init__(self, model: Model, params, *, max_batch: int = 8,
+    Accepts either a backend, or `(model, params)` for the common dense case
+    (kept for backwards compatibility with the original server)."""
+
+    def __init__(self, backend_or_model, params=None, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0):
-        self.model = model
-        self.params = params
+        if isinstance(backend_or_model, Model):
+            backend: InferenceBackend = DenseBackend(backend_or_model, params)
+        else:
+            backend = backend_or_model
+        self.backend = backend
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
-        self.queue: Dict[int, List[Request]] = defaultdict(list)
-        self._prefill = jax.jit(make_prefill_step(model, max_len))
-        self._step = jax.jit(make_serve_step(model), donate_argnums=1)
+        self.queue: List[Request] = []
         self.completed: List[Request] = []
+        # scheduler event log: (event, slot, rid, step_index) — lets tests
+        # and operators confirm mid-flight admissions/retirements
+        self.events: List[Tuple[str, int, int, int]] = []
+        self._step_time_s = 0.0
+        self._step_tokens = 0
 
     def submit(self, req: Request):
         req.submitted_at = time.time()
-        self.queue[len(req.prompt)].append(req)
+        self.queue.append(req)
 
-    def _serve_batch(self, reqs: List[Request]):
-        b = len(reqs)
-        prompts = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
-        batch = Batch(tokens=prompts, loss_mask=jnp.ones(prompts.shape))
-        t0 = time.time()
-        logits, cache, positions = self._prefill(self.params, batch)
-        jax.block_until_ready(logits)
-        t_prefill = time.time() - t0
-
-        steps = max(r.max_new_tokens for r in reqs)
-        outs = [[] for _ in range(b)]
+    # ------------------------------------------------------------------
+    def _sample(self, logits) -> np.ndarray:
         self.key, sub = jax.random.split(self.key)
-        tok = sample_token(logits, sub, self.temperature)
-        for i in range(steps):
-            for j in range(b):
-                if i < reqs[j].max_new_tokens:
-                    outs[j].append(int(tok[j]))
-            if i == steps - 1:
-                break
-            self.key, sub = jax.random.split(self.key)
-            logits, cache = self._step(self.params, cache, tok[:, None], positions)
-            positions = positions + 1
-            tok = sample_token(logits, sub, self.temperature)
-        done = time.time()
-        for j, r in enumerate(reqs):
-            r.output = np.asarray(outs[j], np.int32)
-            r.prefill_latency_s = t_prefill
-            r.total_latency_s = done - r.submitted_at
-            self.completed.append(r)
+        return np.asarray(sample_token(jnp.asarray(logits), sub,
+                                       self.temperature))
 
     def run(self):
-        """Drain the queue, largest buckets first."""
-        for length in sorted(self.queue, key=lambda k: -len(self.queue[k])):
-            reqs = self.queue[length]
-            while reqs:
-                chunk, self.queue[length] = reqs[: self.max_batch], reqs[self.max_batch:]
-                reqs = self.queue[length]
-                self._serve_batch(chunk)
+        """Serve until queue and in-flight slots are drained."""
+        if not self.queue:
+            return
+        self.backend.start_batch(self.max_batch, self.max_len)
+        free = list(range(self.max_batch))
+        for slot in free:           # slots are inactive until a request joins
+            self.backend.release(slot)
+        active: Dict[int, Request] = {}
+        outs: Dict[int, List[int]] = {}
+        pending_tok: Dict[int, int] = {}
+        step_idx = 0
 
+        def retire(slot: int):
+            req = active.pop(slot)
+            req.output = np.asarray(outs.pop(slot), np.int32)
+            req.total_latency_s = time.time() - req.submitted_at
+            pending_tok.pop(slot, None)
+            self.backend.release(slot)
+            self.completed.append(req)
+            self.events.append(("retire", slot, req.rid, step_idx))
+            free.append(slot)
+
+        while self.queue or active:
+            # finished requests free their slots before the next step
+            for slot in [s for s, r in active.items()
+                         if len(outs[s]) >= r.max_new_tokens]:
+                retire(slot)
+            # admission: queued requests take any free slot mid-flight
+            while free and self.queue:
+                slot, req = free.pop(0), self.queue.pop(0)
+                t0 = time.time()
+                logits = self.backend.join(
+                    slot, np.asarray(req.prompt, np.int32))
+                t1 = time.time()
+                req.queue_wait_s = t0 - req.submitted_at
+                req.prefill_latency_s = t1 - t0
+                tok = int(self._sample(logits[None])[0])
+                active[slot] = req
+                outs[slot] = [tok][: req.max_new_tokens]
+                pending_tok[slot] = tok
+                self.events.append(("join", slot, req.rid, step_idx))
+            stepping = [s for s, r in active.items()
+                        if len(outs[s]) < r.max_new_tokens]
+            if not stepping:
+                continue
+            tokens = np.zeros((self.max_batch,), np.int32)
+            for slot in stepping:
+                tokens[slot] = pending_tok[slot]
+            t0 = time.time()
+            logits = self.backend.step(tokens)
+            dt = time.time() - t0
+            nxt = self._sample(logits)
+            for slot in stepping:
+                active[slot].decode_s += dt
+                outs[slot].append(int(nxt[slot]))
+                pending_tok[slot] = int(nxt[slot])
+            self._step_time_s += dt
+            self._step_tokens += len(stepping)
+            step_idx += 1
+
+    # ------------------------------------------------------------------
     def stats(self) -> dict:
         if not self.completed:
             return {}
-        tot_new = sum(len(r.output) for r in self.completed)
-        tot_decode = sum(r.total_latency_s - r.prefill_latency_s for r in self.completed)
+        done = self.completed
         return {
-            "requests": len(self.completed),
-            "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in self.completed])),
-            "mean_total_s": float(np.mean([r.total_latency_s for r in self.completed])),
-            "decode_tok_s": tot_new / max(tot_decode, 1e-9),
+            "requests": len(done),
+            "mean_queue_wait_s": float(np.mean([r.queue_wait_s for r in done])),
+            "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in done])),
+            "mean_decode_s": float(np.mean([r.decode_s for r in done])),
+            "mean_total_s": float(np.mean([r.total_latency_s for r in done])),
+            # decode throughput over decode-step wall time only (queue wait
+            # and prefill are reported separately above)
+            "decode_tok_s": self._step_tokens / max(self._step_time_s, 1e-9),
+            "backend": self.backend.stats(),
         }

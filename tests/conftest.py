@@ -1,0 +1,36 @@
+"""Shared test helpers.
+
+`hypothesis` is an optional dev dependency: the property tests in
+test_core / test_layers / test_moe / test_quantize use it when available,
+but its absence must not error out collection of the whole suite.  Test
+modules import the real names when possible and fall back to these stubs,
+under which every ``@given`` test is collected as a zero-arg skip.
+"""
+
+import pytest
+
+
+def hypothesis_stubs():
+    """Return (given, settings, st) stand-ins: property tests collect but
+    skip with a clear reason instead of erroring the module import."""
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    def given(*_a, **_k):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def stub():  # zero-arg: no fixture resolution for strategy params
+                pass
+
+            stub.__name__ = f.__name__
+            stub.__doc__ = f.__doc__
+            return stub
+
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    return given, settings, _AnyStrategy()

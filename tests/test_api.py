@@ -1,0 +1,218 @@
+"""Unified serving API tests: protocol conformance, dense-vs-offload logits
+parity under an unconstrained cache, batched HobbitBackend decode vs batch=1,
+continuous batching with mid-flight slot reuse through both backends, and
+the decode-only latency accounting of BatchingServer.stats()."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import EngineConfig, OffloadEngine, Thresholds
+from repro.models import build_model
+from repro.serving.api import (DenseBackend, HobbitBackend, InferenceBackend,
+                               generate, make_backend, score_nll)
+from repro.serving.batching import BatchingServer, Request
+from repro.serving.decode import generate as dense_generate
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                        vocab=256)
+    # ample capacity so the dense MoE dispatch never drops tokens at batch>1
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _unconstrained(m):
+    """EngineConfig whose hi pool holds every (layer, expert) entity at full
+    precision: the offload path must then match dense numerics."""
+    n = m.cfg.num_layers * m.cfg.moe.num_experts
+    return EngineConfig(hi_slots=n, lo_slots=1, thresholds=Thresholds(1.0, 1.0),
+                        prefetch=False)
+
+
+# ------------------------------------------------------------- protocol
+def test_backends_satisfy_protocol(setup):
+    m, params = setup
+    assert isinstance(DenseBackend(m, params), InferenceBackend)
+    eng = OffloadEngine(m, params, _unconstrained(m))
+    assert isinstance(HobbitBackend(eng), InferenceBackend)
+    assert isinstance(make_backend("dense", m, params), DenseBackend)
+    assert isinstance(make_backend("hobbit", m, params), HobbitBackend)
+    with pytest.raises(ValueError):
+        make_backend("nope", m, params)
+
+
+def test_dense_backend_matches_legacy_generate(setup):
+    m, params = setup
+    prompts = np.random.default_rng(0).integers(0, 256, (2, 8))
+    res_api = generate(DenseBackend(m, params), prompts, 6)
+    res_old = dense_generate(m, params, jnp.asarray(prompts, jnp.int32), 6)
+    np.testing.assert_array_equal(res_api.tokens, res_old.tokens)
+
+
+# ------------------------------------------------- dense vs offload parity
+def test_dense_vs_hobbit_logits_parity_unconstrained(setup):
+    """With every expert resident at high precision, per-step logits of the
+    offload path must match the dense path."""
+    m, params = setup
+    prompts = np.random.default_rng(1).integers(0, 256, (2, 6))
+    teacher = np.random.default_rng(2).integers(0, 256, (4, 2))
+
+    dense = DenseBackend(m, params)
+    hob = HobbitBackend(OffloadEngine(m, params, _unconstrained(m)))
+    dense.start_batch(2, 32)
+    hob.start_batch(2, 32)
+    lg_d = dense.prefill(prompts)
+    lg_h = hob.prefill(prompts)
+    np.testing.assert_allclose(lg_d, lg_h, atol=1e-3)
+    for t in range(4):
+        lg_d = dense.step(teacher[t])
+        lg_h = hob.step(teacher[t])
+        np.testing.assert_allclose(lg_d, lg_h, atol=1e-3)
+
+
+def test_dense_vs_hobbit_generate_tokens_equal(setup):
+    m, params = setup
+    prompts = np.random.default_rng(3).integers(0, 256, (2, 8))
+    res_d = generate(DenseBackend(m, params), prompts, 6)
+    res_h = generate(HobbitBackend(OffloadEngine(m, params, _unconstrained(m))),
+                     prompts, 6)
+    np.testing.assert_array_equal(res_d.tokens, res_h.tokens)
+
+
+def test_score_nll_parity_unconstrained(setup):
+    m, params = setup
+    toks = np.random.default_rng(4).integers(0, 256, 10)
+    nll_d = score_nll(DenseBackend(m, params), toks)
+    nll_h = score_nll(HobbitBackend(OffloadEngine(m, params, _unconstrained(m))),
+                      toks)
+    assert abs(nll_d - nll_h) < 1e-4
+
+
+# ------------------------------------------------- batched hobbit decode
+def test_hobbit_batched_matches_batch1(setup):
+    """Per-slot outputs of a batch=2 mixed-precision HOBBIT decode equal the
+    corresponding batch=1 runs (per-slot precision decisions; expert loading
+    is the union of slots, but numerics stay per-slot)."""
+    m, params = setup
+    ecfg = EngineConfig(hi_slots=16, lo_slots=8, thresholds=Thresholds(0.6, 0.9))
+    prompts = np.random.default_rng(5).integers(0, 256, (2, 8))
+    res_b = generate(HobbitBackend(OffloadEngine(m, params, ecfg)), prompts, 5,
+                     max_len=32)
+    for r in range(2):
+        res_1 = generate(HobbitBackend(OffloadEngine(m, params, ecfg)),
+                         prompts[r : r + 1], 5, max_len=32)
+        np.testing.assert_array_equal(res_b.tokens[r], res_1.tokens[0])
+
+
+def test_hobbit_batched_trace_and_stats(setup):
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(hi_slots=16, lo_slots=8))
+    backend = HobbitBackend(eng)
+    generate(backend, np.random.default_rng(6).integers(0, 256, (3, 4)), 4)
+    # one trace entry per active slot per decode step, each covering all layers
+    assert len(eng.trace) == 3 * 3  # (new_tokens - 1) steps x 3 slots
+    assert all(len(tok) == eng.num_moe_layers for tok in eng.trace)
+    s = backend.stats()
+    assert s["backend"] == "hobbit" and s["loaded_bytes"] > 0
+
+
+# ------------------------------------------------- continuous batching
+def _mixed_workload(rng):
+    return [Request(rid=i, prompt=rng.integers(0, 256, 4 + 2 * (i % 2)),
+                    max_new_tokens=[3, 7, 4, 2][i]) for i in range(4)]
+
+
+def _backend_factory(kind, m, params):
+    if kind == "dense":
+        return lambda: DenseBackend(m, params)
+    ecfg = EngineConfig(hi_slots=16, lo_slots=8)
+    return lambda: HobbitBackend(OffloadEngine(m, params, ecfg))
+
+
+@pytest.mark.parametrize("kind", ["dense", "hobbit"])
+def test_continuous_batching_mid_flight(setup, kind):
+    """More requests than slots with mixed max_new_tokens: finished requests
+    free their slots mid-flight, queued requests join at the next step, and
+    every request's output equals its isolated single-request run."""
+    m, params = setup
+    mk = _backend_factory(kind, m, params)
+    rng = np.random.default_rng(7)
+    reqs = _mixed_workload(rng)
+    prompts = [np.array(r.prompt) for r in reqs]
+
+    srv = BatchingServer(mk(), max_batch=2, max_len=64)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+
+    assert len(srv.completed) == 4
+    by_rid = {r.rid: r for r in srv.completed}
+    for i, p in enumerate(prompts):
+        assert by_rid[i].output.shape[0] == [3, 7, 4, 2][i]
+        res = generate(mk(), p[None], [3, 7, 4, 2][i], max_len=64)
+        np.testing.assert_array_equal(by_rid[i].output,
+                                      res.tokens[0, len(p):])
+    # at least one queued request joined after decoding had already started
+    assert any(e[0] == "join" and e[3] > 0 for e in srv.events)
+    # and some retirement happened while another request was still in flight
+    retire_steps = [e[3] for e in srv.events if e[0] == "retire"]
+    assert min(retire_steps) < max(retire_steps)
+
+
+def test_dense_backend_wide_batch_junk_slots_inert(setup):
+    """Released slots' junk rows must not crowd live tokens out of MoE
+    dispatch capacity at production capacity_factor (1.25): a single live
+    request in the highest slot of a 10-slot batch decodes identically to
+    its isolated run (9 identical junk rows route together, so without the
+    active-mask they could fill an expert's capacity ahead of the live row)."""
+    m, params = setup
+    cfg = dataclasses.replace(
+        m.cfg, moe=dataclasses.replace(m.cfg.moe, capacity_factor=1.25))
+    m125 = build_model(cfg)
+    prompt = np.random.default_rng(9).integers(0, 256, (1, 5))
+    want = generate(DenseBackend(m125, params), prompt, 6, max_len=32)
+    be = DenseBackend(m125, params)
+    be.start_batch(10, 32)
+    for s in range(10):
+        be.release(s)
+    lg = be.join(9, prompt[0])
+    toks = [int(np.argmax(lg))]
+    for _ in range(5):
+        vec = np.zeros((10,), np.int32)
+        vec[9] = toks[-1]
+        lg = be.step(vec)
+        toks.append(int(np.argmax(lg[9])))
+    np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                  want.tokens[0, 5:])
+
+
+def test_batching_server_stats_decode_only(setup):
+    """stats() reports per-request queue wait separately; decode_tok_s is
+    computed over decode-step wall time only (not prefill, not queue wait)."""
+    m, params = setup
+    srv = BatchingServer(DenseBackend(m, params), max_batch=2, max_len=64)
+    rng = np.random.default_rng(8)
+    for r in _mixed_workload(rng):
+        srv.submit(r)
+    srv.run()
+    st = srv.stats()
+    assert st["requests"] == 4
+    assert st["decode_tok_s"] > 0
+    for key in ("mean_queue_wait_s", "mean_prefill_s", "mean_decode_s",
+                "mean_total_s"):
+        assert st[key] >= 0.0
+    # queued requests (more requests than slots) must see nonzero queue wait
+    assert max(r.queue_wait_s for r in srv.completed) > 0
+    # per-request prefill is its own join, not the whole batch's
+    assert all(r.prefill_latency_s > 0 for r in srv.completed)
+    assert st["backend"]["backend"] == "dense"

@@ -3,7 +3,12 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests collect-and-skip without hypothesis
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.core import (FLD, LFU, LHU, LRU, MULTIDIM, MultidimensionalCache,
                         PREC_HI, PREC_LO, PREC_SKIP, Thresholds,

@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests collect-and-skip without hypothesis
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.configs import get_config, smoke_variant
 from repro.models import layers as L

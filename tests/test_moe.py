@@ -7,7 +7,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # property tests collect-and-skip without hypothesis
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
 
 from repro.configs import get_config, smoke_variant
 from repro.configs.base import MoEConfig
@@ -63,6 +68,24 @@ def test_property_dispatch_indices(e, k, t, seed):
     # per-expert occupancy never exceeds capacity
     occ = np.bincount(kept // cap, minlength=e)
     assert (occ <= cap).all()
+
+
+def test_dispatch_token_mask_frees_capacity():
+    """Dead tokens (inactive continuous-batching slots) must occupy no expert
+    capacity: live tokens behind them in arrival order are never crowded out."""
+    mc = MoEConfig(num_experts=2, top_k=1, d_ff_expert=8)
+    idx = jnp.zeros((12, 1), jnp.int32)          # every token -> expert 0
+    cap = 8
+    slot, keep = moe_lib.dispatch_indices(idx, mc, cap)
+    keep = np.asarray(keep)[:, 0]
+    assert keep[:8].all() and not keep[8:].any()  # unmasked: overflow drops
+    # first 8 arrivals are dead slots: the 4 live tokens behind them all fit
+    mask = jnp.asarray([0] * 8 + [1] * 4, jnp.int32)
+    slot_m, keep_m = moe_lib.dispatch_indices(idx, mc, cap, token_mask=mask)
+    slot_m, keep_m = np.asarray(slot_m)[:, 0], np.asarray(keep_m)[:, 0]
+    assert keep_m[8:].all() and not keep_m[:8].any()
+    assert sorted(slot_m[8:].tolist()) == [0, 1, 2, 3]
+    assert (slot_m[:8] == mc.num_experts * cap).all()  # dead -> trash row
 
 
 def test_router_aux_loss_penalizes_imbalance():
