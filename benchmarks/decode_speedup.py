@@ -1,6 +1,9 @@
 """Fig. 14 reproduction: end-to-end decode throughput of HOBBIT vs the
 paper's baseline systems, trace-driven (real routing traces from the trained
-models; hardware cost models for the RTX 4090 and Jetson Orin groups).
+models; hardware cost models for the RTX 4090 and Jetson Orin groups) —
+plus a *wall-clock* section measuring the grouped batched decode path
+(one hi GEMM + one lo dequant-GEMM per layer, async double-buffered
+prefetch) against the per-expert reference path on this host.
 
 System mapping (paper -> simulator):
   Llama.cpp (LL)        -> dense_layerwise (streams whole layers)
@@ -12,9 +15,16 @@ System mapping (paper -> simulator):
 Expert byte sizes use the paper's full-scale models (Mixtral-8x7B /
 Phi-MoE dims) so the simulated latencies are full-scale, while the routing
 structure comes from the trained smoke models.
+
+CLI:  PYTHONPATH=src:. python -m benchmarks.decode_speedup [--smoke]
+  --smoke runs one model, fewer sequences/steps — the CI configuration that
+  exercises the grouped batched path on every PR.
 """
 
 from __future__ import annotations
+
+import dataclasses as _dc
+import time
 
 import numpy as np
 
@@ -30,24 +40,73 @@ FULL_DIMS = {
 }
 
 
-def run():
+def _wall_clock_decode(model, params, seqs, ecfg, *, steps):
+    """Teacher-forced batched decode wall clock through the serving API
+    (batch = len(seqs)); returns (tok_per_s, engine_stats)."""
+    from repro.serving.api import HobbitBackend
+
+    eng = OffloadEngine(model, params, ecfg)
+    backend = HobbitBackend(eng)
+    arr = np.stack([np.asarray(s, np.int64) for s in seqs])
+    b = arr.shape[0]
+    backend.start_batch(b, steps + 8)
+    for r in range(b):
+        backend.join(r, arr[r, :1].astype(np.int32))
+    backend.step(arr[:, 1].astype(np.int32))      # warm the jit caches
+    t0 = time.perf_counter()
+    for t in range(2, steps + 2):
+        backend.step(arr[:, t].astype(np.int32))
+    dt = time.perf_counter() - t0
+    return b * steps / dt, eng.stats()
+
+
+def wall_clock_rows(kind, model, params, *, batch=4, steps=24):
+    """Grouped vs per-expert reference decode wall clock at batch >= 4."""
+    seqs = common.eval_token_stream(batch)
+    e = model.cfg.moe.num_experts
+    n_entities = model.cfg.num_layers * e
+    kw = dict(hi_slots=max(8, n_entities // 3),
+              lo_slots=max(4, n_entities // 6), prefetch_p=2)
+    grouped, gstats = _wall_clock_decode(
+        model, params, seqs, EngineConfig(**kw), steps=steps)
+    ref, _ = _wall_clock_decode(
+        model, params, seqs,
+        EngineConfig(grouped=False, async_prefetch=False, **kw), steps=steps)
+    return [
+        (f"wallclock_decode_tok_s[{kind}][b{batch}][grouped]",
+         round(grouped, 2), "tok/s (this host, batched grouped path)"),
+        (f"wallclock_decode_tok_s[{kind}][b{batch}][per_expert]",
+         round(ref, 2), "tok/s (this host, per-expert reference path)"),
+        (f"wallclock_grouped_speedup[{kind}][b{batch}]",
+         round(grouped / ref, 2), "grouped vs per-expert, same numerics"),
+        (f"wallclock_overlap_fraction[{kind}][b{batch}]",
+         round(gstats["overlap_fraction"], 3),
+         "share of prefetch copy time hidden behind compute"),
+        (f"wallclock_load_stall_s[{kind}][b{batch}]",
+         round(gstats["load_stall_s"], 4), "loading time on critical path"),
+    ]
+
+
+def run(smoke: bool = False):
     rows = []
-    for kind in ("mixtral-smoke", "phi-smoke"):
+    kinds = ("mixtral-smoke",) if smoke else ("mixtral-smoke", "phi-smoke")
+    for kind in kinds:
         model, params = common.get_trained(kind)
-        seqs = common.eval_token_stream(4)
+        rows.extend(wall_clock_rows(kind, model, params, batch=4,
+                                    steps=8 if smoke else 24))
+        seqs = common.eval_token_stream(2 if smoke else 4)
         e = model.cfg.moe.num_experts
         n_entities = model.cfg.num_layers * e
         eng = OffloadEngine(model, params, EngineConfig(
             hi_slots=max(8, n_entities // 3), lo_slots=max(4, n_entities // 6),
             prefetch_p=2))
-        # all 4 eval sequences decode as ONE batch through the serving API
+        # all eval sequences decode as ONE batch through the serving API
         # (union-of-slots expert loading), matching the deployment scenario
         trace = common.collect_trace_batched(eng, seqs)
         d, f = FULL_DIMS[kind]
         cfg = HobbitSimConfig(
             hi_slots=max(8, n_entities // 3), lo_slots=max(4, n_entities // 6),
             hi_bytes=expert_nbytes(d, f, 16), lo_bytes=expert_nbytes(d, f, 4))
-        import dataclasses as _dc
         for hw in (RTX4090, JETSON_ORIN):
             res = simulate_systems(trace, eng.num_moe_layers, hw, cfg)
             # beyond-paper: confidence-gated prefetch variant
@@ -62,6 +121,9 @@ def run():
             for sysname, r in res.items():
                 rows.append((f"fig14_decode_tok_s[{kind}][{hw.name}][{sysname}]",
                              round(r["tok_per_s"], 2), "tok/s (simulated)"))
+                rows.append((f"fig14_overlap_fraction[{kind}][{hw.name}][{sysname}]",
+                             round(r["overlap_fraction"], 3),
+                             "simulated share of transfer hidden by compute"))
             rows.append((f"fig14_speedup_vs_MoE-Offloading[{kind}][{hw.name}]",
                          round(hb / base_mo, 2), "paper: ~3.2x (4090)"))
             rows.append((f"fig14_speedup_vs_MoE-Infinity[{kind}][{hw.name}]",
@@ -80,5 +142,11 @@ def run():
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one model, fewer sequences/steps (CI configuration)")
+    args = ap.parse_args()
+    for r in run(smoke=args.smoke):
         print(",".join(map(str, r)))

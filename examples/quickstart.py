@@ -48,9 +48,11 @@ def main():
     res = generate(backend, prompt, 24)
     s = eng.stats()
     print(f"\nHOBBIT generated: {res.tokens[0, prompt.shape[1]:].tolist()}")
-    print(f"cache hit ratio: {s['cache'].hit_ratio():.2f}  "
+    print(f"cache hit ratio: {s['cache']['hit_ratio']:.2f}  "
           f"loads hi/lo/skip: {s['loads_hi']}/{s['loads_lo']}/{s['skips']}")
     print(f"next-layer prediction accuracy: {s['pred_accuracy']}")
+    print(f"load stall: {s['load_stall_s']*1e3:.1f} ms  prefetch overlap: "
+          f"{s['overlap_fraction']:.0%} of copy time hidden behind compute")
 
     # 4. accuracy impact of mixed-precision substitution, through the same
     #    serving API (the scorer decodes teacher-forced on the offload path)

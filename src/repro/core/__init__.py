@@ -1,6 +1,7 @@
-from repro.core.cache import CacheStats, MultidimensionalCache
+from repro.core.cache import CacheStarvation, CacheStats, MultidimensionalCache
 from repro.core.engine import EngineConfig, OffloadEngine
-from repro.core.loader import DynamicExpertLoader, LoadTask
+from repro.core.loader import (AsyncExpertScheduler, DynamicExpertLoader,
+                               LoadTask)
 from repro.core.policies import (FLD, LFU, LHU, LRU, MULTIDIM, NAMED_POLICIES,
                                  PolicyWeights)
 from repro.core.predictor import AdaptiveExpertPredictor, gating_input_similarity
@@ -13,8 +14,8 @@ from repro.core.simulator import (HARDWARE, HobbitSimConfig, JETSON_ORIN,
                                   simulate_systems)
 
 __all__ = [
-    "CacheStats", "MultidimensionalCache", "EngineConfig", "OffloadEngine",
-    "DynamicExpertLoader", "LoadTask", "FLD", "LFU", "LHU", "LRU", "MULTIDIM",
+    "CacheStarvation", "CacheStats", "MultidimensionalCache", "EngineConfig",
+    "OffloadEngine", "AsyncExpertScheduler", "DynamicExpertLoader", "LoadTask", "FLD", "LFU", "LHU", "LRU", "MULTIDIM",
     "NAMED_POLICIES", "PolicyWeights", "AdaptiveExpertPredictor",
     "gating_input_similarity", "PREC_HI", "PREC_LO", "PREC_SKIP", "Thresholds",
     "calibrate_thresholds", "gate_output_correlation", "precision_decisions",

@@ -14,6 +14,13 @@ from typing import Dict, Optional, Set, Tuple
 from repro.core.policies import ExpertKey, PolicyRecords, PolicyWeights, MULTIDIM
 
 
+class CacheStarvation(RuntimeError):
+    """Raised when admission finds no evictable slot: every resident entry is
+    either hard-pinned by the executing layer or has an async load in flight.
+    Callers resolve it by draining in-flight loads (which clears reservations)
+    and retrying."""
+
+
 @dataclasses.dataclass
 class CacheStats:
     hits_hi: int = 0
@@ -37,6 +44,15 @@ class CacheStats:
     def miss_penalty(self, lo_cost_ratio: float = 0.25) -> float:
         """Paper's mixed-precision penalty: hi miss costs 1, lo miss B_l/B_h."""
         return self.misses_hi + lo_cost_ratio * self.misses_lo
+
+    def to_dict(self) -> Dict[str, float]:
+        """JSON-serializable view (engine.stats() contract)."""
+        return {
+            "hits_hi": self.hits_hi, "hits_lo": self.hits_lo,
+            "misses_hi": self.misses_hi, "misses_lo": self.misses_lo,
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions, "hit_ratio": self.hit_ratio(),
+        }
 
 
 class PrecisionPool:
@@ -75,6 +91,11 @@ class MultidimensionalCache:
         self.weights = weights
         self.pinned: Set[Tuple[ExpertKey, bool]] = set()  # (key, is_hi)
         self.hard_pinned: Set[Tuple[ExpertKey, bool]] = set()
+        # async-load reservations: (key, is_hi) -> slot.  The entry already
+        # owns its slot in the pool table, but the weight bytes are still in
+        # flight; it must never be evicted (the staged write would land on a
+        # reassigned slot) and compute must wait() before reading the slot.
+        self.inflight: Dict[Tuple[ExpertKey, bool], int] = {}
         self.stats = CacheStats()
 
     # ------------- sequence / token lifecycle -------------
@@ -95,6 +116,27 @@ class MultidimensionalCache:
         self.pinned.add((key, high_precision))
         if hard:
             self.hard_pinned.add((key, high_precision))
+
+    # ------------- async-load reservations -------------
+    def begin_inflight(self, key: ExpertKey, high_precision: bool, slot: int):
+        self.inflight[(key, high_precision)] = slot
+
+    def end_inflight(self, key: ExpertKey, high_precision: bool):
+        self.inflight.pop((key, high_precision), None)
+
+    def is_inflight(self, key: ExpertKey, high_precision: bool) -> bool:
+        return (key, high_precision) in self.inflight
+
+    def can_admit(self, high_precision: bool) -> bool:
+        """True iff admit() can find a slot without touching an in-flight
+        reservation or a hard-pinned resident — used by the async scheduler
+        to drop (rather than deadlock on) prefetches under slot pressure."""
+        pool = self.hi if high_precision else self.lo
+        if pool.free:
+            return True
+        return any((k, high_precision) not in self.inflight
+                   and (k, high_precision) not in self.hard_pinned
+                   for k in pool.slot_of)
 
     # ------------- queries -------------
     def lookup(self, key: ExpertKey, high_precision: bool) -> Optional[int]:
@@ -147,18 +189,28 @@ class MultidimensionalCache:
                        current_layer: int) -> ExpertKey:
         best_key, best_p = None, float("inf")
         for key in pool.slot_of:
-            if (key, is_hi) in self.pinned:
+            if (key, is_hi) in self.pinned or (key, is_hi) in self.inflight:
                 continue
             p = self.records.priority(key, self.weights, current_layer)
             if p < best_p:
                 best_key, best_p = key, p
         if best_key is None:
             # everything soft-pinned: sacrifice a predicted expert, but never
-            # one the currently-executing layer needs (hard pin)
+            # one the currently-executing layer needs (hard pin) or one whose
+            # weight bytes are still landing (in flight)
             cands = [k for k in pool.slot_of
-                     if (k, is_hi) not in self.hard_pinned]
+                     if (k, is_hi) not in self.hard_pinned
+                     and (k, is_hi) not in self.inflight]
             if not cands:
-                cands = list(pool.slot_of)  # pathological: cache < top_k
+                # pathological: cache < top_k.  Hard-pinned entries of the
+                # executing layer may be sacrificed (they already computed or
+                # will be reloaded on demand) but in-flight ones never can.
+                cands = [k for k in pool.slot_of
+                         if (k, is_hi) not in self.inflight]
+            if not cands:
+                raise CacheStarvation(
+                    f"{'hi' if is_hi else 'lo'} pool: every resident expert "
+                    "has an async load in flight; drain the scheduler first")
             best_key = min(cands, key=lambda k: self.records.priority(
                 k, self.weights, current_layer))
         return best_key

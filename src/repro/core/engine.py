@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -26,16 +27,24 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.cache import MultidimensionalCache
-from repro.core.loader import DynamicExpertLoader
+from repro.core.loader import (ON_DEMAND, AsyncExpertScheduler,
+                               DynamicExpertLoader, LoadTask)
 from repro.core.policies import MULTIDIM, PolicyWeights
 from repro.core.predictor import AdaptiveExpertPredictor
 from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
                                 precision_decisions)
 from repro.core.simulator import TraceLayer
+from repro.kernels import ops as kops
 from repro.models import layers as L
 from repro.models import unstack_layers
 from repro.models.model import Batch, Model
 from repro.quant.quantize import QTensor, dequantize, expert_nbytes, quantize
+
+
+def _np_qtensor(q: QTensor) -> QTensor:
+    """Move a QTensor's leaves to host numpy (read-only expert storage)."""
+    return QTensor(data=np.asarray(q.data), scale=np.asarray(q.scale),
+                   bits=q.bits, group_size=q.group_size, orig_k=q.orig_k)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +59,14 @@ class EngineConfig:
     dynamic_loading: bool = True     # ablation switch (Fig. 16)
     prefetch: bool = True            # ablation switch (Fig. 17)
     compute_mode: str = "device"     # device | host (CPU-helper mode §4)
+    # grouped decode: one batched gating matmul + one batched hi GEMM + one
+    # batched lo dequant-GEMM per MoE layer instead of O(batch*top_k) tiny
+    # per-expert dispatches.  False selects the original per-expert path
+    # (the parity reference; also used automatically in host compute mode).
+    grouped: bool = True
+    # stage prefetch copies on a background executor so they overlap compute
+    # in wall clock (double-buffered).  False drains them synchronously.
+    async_prefetch: bool = True
 
 
 class OffloadEngine:
@@ -80,13 +97,17 @@ class OffloadEngine:
             wi = np.asarray(ffn["experts"]["wi"], np.float32)  # (E, D, wi_cols)
             wo = np.asarray(ffn["experts"]["wo"], np.float32)  # (E, F, D)
             self.storage_hi.append({"wi": wi, "wo": wo})
+            # host storage lives in numpy so background staging threads never
+            # issue device computations
             self.storage_lo.append({
-                "wi": quantize(jnp.asarray(wi), bits=ecfg.lo_bits,
-                               group_size=ecfg.group_size),
-                "wo": quantize(jnp.asarray(wo), bits=ecfg.lo_bits,
-                               group_size=ecfg.group_size),
+                "wi": _np_qtensor(quantize(jnp.asarray(wi), bits=ecfg.lo_bits,
+                                           group_size=ecfg.group_size)),
+                "wo": _np_qtensor(quantize(jnp.asarray(wo), bits=ecfg.lo_bits,
+                                           group_size=ecfg.group_size)),
             })
             self.routers.append(np.asarray(ffn["router"], np.float32))
+        # routers pre-stacked on device for the grouped (B,D)@(D,E) gating
+        self.routers_dev = jnp.asarray(np.stack(self.routers))   # (L, D, E)
 
         # ---- device pools ----
         self.pool_hi = {
@@ -112,6 +133,8 @@ class OffloadEngine:
             self.cache, ecfg.thresholds if ecfg.dynamic_loading
             else Thresholds(1.0, 1.0),
             self._fetch, lambda prec: self.expert_bytes[prec])
+        self.scheduler = AsyncExpertScheduler(
+            self.loader, self._stage, self._commit_staged)
         self.predictor = AdaptiveExpertPredictor(
             self.routers, mc.top_k, p=ecfg.prefetch_p)
 
@@ -119,6 +142,10 @@ class OffloadEngine:
         self._pending_preds: List = []
         self.trace: List[List[TraceLayer]] = []
         self._jit_cache: Dict[str, callable] = {}
+        self._gating_s = 0.0
+        self._expert_dispatches = 0     # grouped-path compute dispatches
+        self._union_reloads = 0         # same-layer contention re-fetches
+        self._ovf_np = None             # lazy overflow staging buffers
         self.batch = 1
         self.max_len = 0
         self.active = np.ones((1,), bool)
@@ -144,6 +171,97 @@ class OffloadEngine:
                 src["wo"].data[expert])
             self.pool_lo["wo_scale"] = self.pool_lo["wo_scale"].at[slot].set(
                 src["wo"].scale[expert])
+
+    def _stage(self, moe_idx: int, expert: int, precision: int) -> dict:
+        """Gather one expert's weight bytes from host storage into staging
+        buffers (the host half of the transfer).  Read-only on shared state,
+        so the async scheduler may run it on a background thread."""
+        if precision == PREC_HI:
+            src = self.storage_hi[moe_idx]
+            return {"wi": np.ascontiguousarray(src["wi"][expert]),
+                    "wo": np.ascontiguousarray(src["wo"][expert])}
+        src = self.storage_lo[moe_idx]
+        return {"wi_data": np.ascontiguousarray(src["wi"].data[expert]),
+                "wi_scale": np.ascontiguousarray(src["wi"].scale[expert]),
+                "wo_data": np.ascontiguousarray(src["wo"].data[expert]),
+                "wo_scale": np.ascontiguousarray(src["wo"].scale[expert])}
+
+    def _scatter_fn(self, n_tensors: int):
+        """Jitted multi-tensor slot scatter (eager `.at[].set` pays ~ms of
+        python dispatch per call on CPU; the jitted version is the single
+        fused update the issue's `_fetch_many` contract asks for)."""
+        key = ("scatter", n_tensors)
+        if key not in self._jit_cache:
+            def scatter(pools, idx, values):
+                return [p.at[idx].set(v.astype(p.dtype))
+                        for p, v in zip(pools, values)]
+            self._jit_cache[key] = jax.jit(scatter)
+        return self._jit_cache[key]
+
+    def _commit_staged(self, entries):
+        """Write staged buffers into the device pools: ONE `.at[idx].set`
+        scatter per pool tensor regardless of how many experts landed.
+        entries: [(task_like_with_precision, slot, staged_dict)]."""
+        def pad_pow2(pairs):
+            # repeat the last (slot, buffer) up to a power-of-two count: the
+            # duplicate write is idempotent and caps scatter retraces at
+            # log(pool) shapes
+            n = 1 << (len(pairs) - 1).bit_length()
+            return pairs + [pairs[-1]] * (n - len(pairs))
+
+        hi = [(s, buf) for t, s, buf in entries if t.precision == PREC_HI]
+        lo = [(s, buf) for t, s, buf in entries if t.precision != PREC_HI]
+        hi = pad_pow2(hi) if hi else hi
+        lo = pad_pow2(lo) if lo else lo
+        if hi:
+            idx = jnp.asarray([s for s, _ in hi], jnp.int32)
+            new = self._scatter_fn(2)(
+                [self.pool_hi["wi"], self.pool_hi["wo"]], idx,
+                [jnp.asarray(np.stack([b["wi"] for _, b in hi])),
+                 jnp.asarray(np.stack([b["wo"] for _, b in hi]))])
+            self.pool_hi["wi"], self.pool_hi["wo"] = new
+        if lo:
+            idx = jnp.asarray([s for s, _ in lo], jnp.int32)
+            names = ("wi_data", "wi_scale", "wo_data", "wo_scale")
+            new = self._scatter_fn(4)(
+                [self.pool_lo[n] for n in names], idx,
+                [jnp.asarray(np.stack([b[n] for _, b in lo])) for n in names])
+            for n, v in zip(names, new):
+                self.pool_lo[n] = v
+
+    def _overflow_buffers(self, pp: int) -> Dict[str, np.ndarray]:
+        """Reusable host staging buffers for union-overflow experts (cache
+        smaller than a layer's union demand).  Stale entries from earlier
+        layers are never addressed: overflow slot indices are only assigned
+        to entries written this layer."""
+        if self._ovf_np is None or self._ovf_np["hi_wi"].shape[0] < pp:
+            qi, qo = self.storage_lo[0]["wi"], self.storage_lo[0]["wo"]
+            d, f = self.cfg.d_model, self.cfg.moe.d_ff_expert
+            wi_cols = self.storage_hi[0]["wi"].shape[-1]
+            self._ovf_np = {
+                "hi_wi": np.zeros((pp, d, wi_cols), np.float32),
+                "hi_wo": np.zeros((pp, f, d), np.float32),
+                "lo_wi_data": np.zeros((pp, *qi.data.shape[1:]), np.int8),
+                "lo_wi_scale": np.zeros((pp, *qi.scale.shape[1:]), np.float32),
+                "lo_wo_data": np.zeros((pp, *qo.data.shape[1:]), np.int8),
+                "lo_wo_scale": np.zeros((pp, *qo.scale.shape[1:]), np.float32),
+            }
+        return self._ovf_np
+
+    def _fetch_many(self, items: List[Tuple[int, int, int, int]]):
+        """Blocking batched fetch into admitted pool slots: items =
+        [(moe_idx, expert, precision, slot)], one scatter per pool tensor.
+        The decode hot paths go through `_stage`/`_commit_staged` directly
+        (async prefetch, batched on-demand drain, overflow staging); this is
+        the standalone batched-fetch entry point for warmup/pre-population
+        and tests."""
+        entries = []
+        for mi, e, prec, slot in items:
+            t = LoadTask(mi, e, int(prec), ON_DEMAND, self.expert_bytes[int(prec)])
+            entries.append((t, slot, self._stage(mi, e, int(prec))))
+            self.loader.loaded_bytes += t.bytes
+            self.loader.n_loads[t.precision] += 1
+        self._commit_staged(entries)
 
     # ------------------------------------------------------------------
     # jitted pieces
@@ -181,6 +299,64 @@ class OffloadEngine:
             z = jax.nn.gelu(z.astype(jnp.float32)).astype(h.dtype)
         return (z.astype(jnp.float32) @ dequantize(qo)).astype(h.dtype)
 
+    def _activate(self, z):
+        cfg = self.cfg
+        if cfg.ffn_activation == "swiglu":
+            g, u = jnp.split(z, 2, axis=-1)
+            return jax.nn.silu(g.astype(jnp.float32)).astype(z.dtype) * u
+        return jax.nn.gelu(z.astype(jnp.float32)).astype(z.dtype)
+
+    def _grouped_ffn(self, hi_wi, hi_wo, lo_wi_data, lo_wi_scale, lo_wo_data,
+                     lo_wo_scale, ovf_hi_wi, ovf_hi_wo, ovf_lo_wi_data,
+                     ovf_lo_wi_scale, ovf_lo_wo_data, ovf_lo_wo_scale, h,
+                     hi_rows, hi_ranks, hi_slot, lo_rows, lo_ranks, lo_slot,
+                     w_hi, w_lo):
+        """All active (row, expert) pairs of one MoE layer in two batched
+        dispatches: one hi GEMM over the gathered hi-pool slots and one lo
+        dequant-GEMM over the gathered lo-pool slots.  Index arrays have
+        fixed length P = batch * top_k (padded entries carry row == batch,
+        which the gather clips and the scatter drops), so each batch size
+        compiles exactly once.  Per-pair outputs land in a (B, K, D) grid at
+        unique (row, rank) cells — combine order is fixed by the rank axis,
+        keeping per-slot numerics independent of neighbouring slots.
+
+        The ovf_* buffers carry union-overflow experts (cache smaller than
+        the layer's union demand at batch > 1): they are appended after the
+        pool slots, so slot index >= pool size addresses the overflow buffer
+        and pairs never evict a slot a neighbouring pair already claimed."""
+        ecfg = self.ecfg
+        b, _, d = h.shape
+        k = w_hi.shape[1]
+        hs = h[:, 0]                                        # (B, D)
+        # ---- one batched hi GEMM ----
+        all_hi_wi = jnp.concatenate([hi_wi, ovf_hi_wi], axis=0)
+        all_hi_wo = jnp.concatenate([hi_wo, ovf_hi_wo], axis=0)
+        xh = hs[jnp.clip(hi_rows, 0, b - 1)]                # (P, D)
+        z = jnp.einsum("pd,pdc->pc", xh, all_hi_wi[hi_slot])
+        out_hi = jnp.einsum("pf,pfd->pd", self._activate(z), all_hi_wo[hi_slot])
+        # ---- one batched lo dequant-GEMM ----
+        all_lo = [jnp.concatenate([a, o], axis=0) for a, o in (
+            (lo_wi_data, ovf_lo_wi_data), (lo_wi_scale, ovf_lo_wi_scale),
+            (lo_wo_data, ovf_lo_wo_data), (lo_wo_scale, ovf_lo_wo_scale))]
+        xl = hs[jnp.clip(lo_rows, 0, b - 1)]
+        zl = kops.grouped_dequant_matmul(
+            xl, all_lo[0][lo_slot], all_lo[1][lo_slot],
+            bits=ecfg.lo_bits, group_size=ecfg.group_size).astype(hs.dtype)
+        out_lo = kops.grouped_dequant_matmul(
+            self._activate(zl), all_lo[2][lo_slot], all_lo[3][lo_slot],
+            bits=ecfg.lo_bits, group_size=ecfg.group_size)
+        # ---- segment combine (unique (row, rank) cells; OOB pads dropped) --
+        grid = jnp.zeros((b, k, d), jnp.float32)
+        grid = grid.at[hi_rows, hi_ranks].set(out_hi.astype(jnp.float32),
+                                              mode="drop")
+        grid = grid.at[lo_rows, lo_ranks].set(out_lo.astype(jnp.float32),
+                                              mode="drop")
+        w = w_hi + w_lo                                     # (B, K), disjoint
+        y = (grid * w[..., None]).sum(axis=1)
+        wsum = w.sum(axis=1)[:, None]
+        y = jnp.where(wsum > 0, y / jnp.where(wsum > 0, wsum, 1.0), 0.0)
+        return y[:, None, :]                                # (B, 1, D)
+
     def _jit(self, name, fn):
         if name not in self._jit_cache:
             self._jit_cache[name] = jax.jit(fn)
@@ -195,6 +371,7 @@ class OffloadEngine:
         batching schedulers toggle individual slots via join()/release()."""
         self.batch = batch
         self.max_len = max_len
+        self.scheduler.flush()          # land any cross-batch in-flight loads
         self.cache.new_sequence()
         self.kv_cache = [
             {"k": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
@@ -282,7 +459,251 @@ class OffloadEngine:
         are junk and cheap) but take no part in gating, expert loading,
         expert compute, the trace, or position advancement.  Expert loading
         is the union of all active slots' demands; precision decisions stay
-        per-slot, so each slot's numerics match its own batch=1 run."""
+        per-slot, so each slot's numerics match its own batch=1 run.
+
+        Two implementations share this contract: the grouped path (default —
+        one batched gating matmul, one hi GEMM and one lo dequant-GEMM per
+        MoE layer, async double-buffered prefetch) and the per-expert
+        reference path (``grouped=False`` or host compute mode), kept as the
+        numerics baseline the parity tests compare against."""
+        if self.ecfg.grouped and self.ecfg.compute_mode == "device":
+            return self._decode_step_batch_grouped(tokens)
+        return self._decode_step_batch_reference(tokens)
+
+    # ---- shared per-layer bookkeeping ----
+    def _score_pending_preds(self, mi: int, tops: Dict[int, np.ndarray]):
+        """Score the accuracy of earlier predictions that targeted layer mi."""
+        still_pending = []
+        for pred, made_at, r in self._pending_preds:
+            if pred.layer == mi:
+                if r in tops:
+                    self.predictor.record_accuracy(pred, tops[r].tolist(),
+                                                   mi - made_at)
+            elif pred.layer > mi:
+                still_pending.append((pred, made_at, r))
+        self._pending_preds = still_pending
+
+    def _push_pending(self, pr, mi: int, r: int):
+        """Record a pending prediction, keeping AT MOST ONE per (layer,
+        slot): a newer prediction (made closer to the target layer, from
+        fresher hidden state) replaces an older one, so record_accuracy
+        scores each (layer, slot) exactly once."""
+        self._pending_preds = [
+            (p, m, rr) for p, m, rr in self._pending_preds
+            if not (p.layer == pr.layer and rr == r)]
+        self._pending_preds.append((pr, mi, r))
+
+    def _prefetch_predictions(self, mi: int, rows, h_host, *,
+                              use_async: bool) -> Dict[int, object]:
+        """Adaptive prefetch for subsequent layers (§3.3).
+
+        Pending-prediction bookkeeping is deduplicated: previously both the
+        adaptive walk and the extra plain next-layer prediction appended an
+        entry for the same (layer, slot), so record_accuracy could count a
+        layer twice per slot and pred_entry[r] was silently overwritten.
+        Now the walk's entry wins and the plain next-layer prediction (kept
+        for the trace/simulator) is only recorded when the walk did not
+        already cover layer mi+1."""
+        pred_entry: Dict[int, object] = {}
+        # merge all rows' predictions per target layer so the async scheduler
+        # stages ONE job per layer instead of one tiny job per batch slot
+        merged: Dict[int, List[Tuple[int, int]]] = {}
+        for r in rows:
+            walk = self.predictor.adaptive_walk(h_host[r], mi, self.cache,
+                                                self.loader.th)
+            walk_layers = set()
+            for pr, dec in walk:
+                pairs = merged.setdefault(pr.layer, [])
+                for e, d in zip(pr.experts, dec):
+                    if (int(e), int(d)) not in pairs:
+                        pairs.append((int(e), int(d)))
+                self._push_pending(pr, mi, r)
+                walk_layers.add(pr.layer)
+                if pr.layer == mi + 1:
+                    pred_entry[r] = pr
+            if mi + 1 not in walk_layers:
+                nxt = self.predictor.predict_layers(h_host[r], mi, 1)
+                if nxt:
+                    self._push_pending(nxt[0], mi, r)
+                    pred_entry[r] = nxt[0]
+        for layer, pairs in merged.items():
+            experts = [e for e, _ in pairs]
+            dec = np.asarray([d for _, d in pairs])
+            if use_async:
+                self.scheduler.submit_prefetch(layer, experts, dec,
+                                               current_layer=mi)
+            else:
+                self.loader.enqueue_prefetch(layer, experts, dec)
+        return pred_entry
+
+    def _trace_entry(self, mi, r, tops, gates, pred_entry) -> TraceLayer:
+        pe = pred_entry.get(r)
+        return TraceLayer(
+            experts=tops[r].tolist(), gate_vals=gates[r],
+            pred_experts=pe.experts if (pe and pe.layer == mi + 1) else None,
+            pred_gate_vals=pe.gate_vals if (pe and pe.layer == mi + 1) else None)
+
+    # ---- grouped implementation (the serving hot path) ----
+    def _decode_step_batch_grouped(self, tokens) -> np.ndarray:
+        cfg, ecfg, mc = self.cfg, self.ecfg, self.cfg.moe
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        assert tokens.shape[0] == self.batch, (tokens.shape, self.batch)
+        b, k = self.batch, mc.top_k
+        rows = [r for r in range(b) if self.active[r]]
+        self.cache.advance_token()
+        tok = jnp.asarray(tokens[:, None])
+        x = jnp.take(self.params["embed"], tok, axis=0)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+
+        attn_step = self._jit("attn", self._attn_step)
+        ffn_in = self._jit("ffn_in", self._ffn_input)
+        gate_fn = self._jit("gate", lambda h2, w: h2 @ w)
+        grouped_ffn = self._jit("grouped_ffn", self._grouped_ffn)
+        combine_fn = self._jit("residual_add",
+                               lambda xx, yy: xx + yy.astype(xx.dtype))
+
+        row_trace = {r: [] for r in rows}
+        for mi, li in enumerate(self.moe_layers):
+            p = self.layer_params[li]
+            x, self.kv_cache[li] = attn_step(p, x, self.kv_cache[li],
+                                             self.positions)
+            h = ffn_in(p, x)                                   # (B,1,D)
+
+            # ---- gating: ONE (B,D)@(D,E) matmul from the stacked routers --
+            h_host = np.asarray(h[:, 0], np.float32)           # (B,D)
+            # (forcing h above keeps the pending attn/ffn-in compute out of
+            # the gating timer)
+            tg0 = time.perf_counter()
+            logits_all = np.asarray(gate_fn(h[:, 0], self.routers_dev[mi]),
+                                    np.float32)                # (B,E)
+            z = logits_all - logits_all.max(axis=-1, keepdims=True)
+            probs = np.exp(z)
+            probs /= probs.sum(axis=-1, keepdims=True)
+            self._gating_s += time.perf_counter() - tg0
+            tops: Dict[int, np.ndarray] = {}
+            gates: Dict[int, np.ndarray] = {}
+            for r in rows:
+                tops[r] = np.argsort(-probs[r])[:k]
+                gates[r] = probs[r][tops[r]]
+
+            self._score_pending_preds(mi, tops)
+
+            # ---- on-demand scoring (union over slots) ----
+            # Hard-pin this layer's experts BEFORE prefetch admission: async
+            # submit_prefetch admits (and may evict) at submit time, so
+            # without the pins it could evict a resident expert this very
+            # layer is about to compute with.
+            self.loader.new_layer()
+            for r in rows:
+                self.loader.score_and_enqueue(mi, tops[r].tolist(), gates[r],
+                                              clear_pins=False)
+
+            pred_entry = {}
+            if ecfg.prefetch:
+                pred_entry = self._prefetch_predictions(
+                    mi, rows, h_host, use_async=ecfg.async_prefetch)
+
+            # ---- loading ----
+            if ecfg.async_prefetch:
+                # barrier: land every prefetch targeting this layer (copies
+                # have been staging in the background since they were
+                # predicted), then blocking-load the residual miss set in one
+                # batched transfer
+                self.scheduler.wait(mi)
+                self.scheduler.drain_on_demand(self.loader.take_queued(), mi)
+            else:
+                self.loader.drain(mi)
+
+            # ---- grouped expert compute: 1 hi + 1 lo dispatch ----
+            # Union-overflow pairs (a same-layer neighbour's admission
+            # evicted this expert: union demand > pool) ride in per-layer
+            # overflow staging buffers appended after the pool slots instead
+            # of re-admitting — re-admission could evict a slot an earlier
+            # pair already claimed, corrupting its compute.  The re-fetch
+            # still counts as a miss + load so hit_ratio reflects real
+            # traffic under contention.
+            pp = b * k
+            hi_rows = np.full(pp, b, np.int32)
+            hi_ranks = np.zeros(pp, np.int32)
+            hi_slots = np.zeros(pp, np.int32)
+            lo_rows = np.full(pp, b, np.int32)
+            lo_ranks = np.zeros(pp, np.int32)
+            lo_slots = np.zeros(pp, np.int32)
+            w_hi = np.zeros((b, k), np.float32)
+            w_lo = np.zeros((b, k), np.float32)
+            ovf = self._overflow_buffers(pp)
+            n_hi = n_lo = 0
+            n_ovf_hi = n_ovf_lo = 0
+            for r in rows:
+                dec = precision_decisions(gates[r], self.loader.th)
+                for j in range(k):
+                    d_ = int(dec[j])
+                    if d_ == PREC_SKIP:
+                        continue
+                    e = int(tops[r][j])
+                    is_hi = d_ == PREC_HI
+                    slot = self.cache.lookup((mi, e), is_hi)
+                    if slot is None:
+                        if is_hi:
+                            self.cache.stats.misses_hi += 1
+                        else:
+                            self.cache.stats.misses_lo += 1
+                        buf = self._stage(mi, e, d_)
+                        if is_hi:
+                            ovf["hi_wi"][n_ovf_hi] = buf["wi"]
+                            ovf["hi_wo"][n_ovf_hi] = buf["wo"]
+                            slot = self.ecfg.hi_slots + n_ovf_hi
+                            n_ovf_hi += 1
+                        else:
+                            for name in ("wi_data", "wi_scale", "wo_data",
+                                         "wo_scale"):
+                                ovf[f"lo_{name}"][n_ovf_lo] = buf[name]
+                            slot = self.ecfg.lo_slots + n_ovf_lo
+                            n_ovf_lo += 1
+                        self.loader.loaded_bytes += self.expert_bytes[d_]
+                        self.loader.n_loads[d_] += 1
+                        self._union_reloads += 1
+                    if is_hi:
+                        hi_rows[n_hi], hi_ranks[n_hi] = r, j
+                        hi_slots[n_hi] = slot
+                        w_hi[r, j] = gates[r][j]
+                        n_hi += 1
+                    else:
+                        lo_rows[n_lo], lo_ranks[n_lo] = r, j
+                        lo_slots[n_lo] = slot
+                        w_lo[r, j] = gates[r][j]
+                        n_lo += 1
+
+            y = grouped_ffn(self.pool_hi["wi"], self.pool_hi["wo"],
+                            self.pool_lo["wi_data"], self.pool_lo["wi_scale"],
+                            self.pool_lo["wo_data"], self.pool_lo["wo_scale"],
+                            jnp.asarray(ovf["hi_wi"], self.dtype),
+                            jnp.asarray(ovf["hi_wo"], self.dtype),
+                            jnp.asarray(ovf["lo_wi_data"]),
+                            jnp.asarray(ovf["lo_wi_scale"]),
+                            jnp.asarray(ovf["lo_wo_data"]),
+                            jnp.asarray(ovf["lo_wo_scale"]),
+                            h, jnp.asarray(hi_rows), jnp.asarray(hi_ranks),
+                            jnp.asarray(hi_slots), jnp.asarray(lo_rows),
+                            jnp.asarray(lo_ranks), jnp.asarray(lo_slots),
+                            jnp.asarray(w_hi), jnp.asarray(w_lo))
+            self._expert_dispatches += 1
+            x = combine_fn(x, y)
+
+            for r in rows:
+                row_trace[r].append(self._trace_entry(mi, r, tops, gates,
+                                                      pred_entry))
+
+        self.positions = self.positions + jnp.asarray(
+            self.active.astype(np.int32))
+        for r in rows:
+            self.trace.append(row_trace[r])
+        lg = self.model.logits(self.params, x)[:, 0]
+        return np.asarray(lg, np.float32)
+
+    # ---- per-expert reference implementation (parity baseline) ----
+    def _decode_step_batch_reference(self, tokens) -> np.ndarray:
         cfg, ecfg, mc = self.cfg, self.ecfg, self.cfg.moe
         tokens = np.asarray(tokens, np.int32).reshape(-1)
         assert tokens.shape[0] == self.batch, (tokens.shape, self.batch)
@@ -315,32 +736,11 @@ class OffloadEngine:
                 tops[r] = np.argsort(-probs)[: mc.top_k]
                 gates[r] = probs[tops[r]]
 
-            # ---- score accuracy of earlier predictions for this layer ----
-            still_pending = []
-            for pred, made_at, r in self._pending_preds:
-                if pred.layer == mi:
-                    if r in tops:
-                        self.predictor.record_accuracy(pred, tops[r].tolist(),
-                                                       mi - made_at)
-                elif pred.layer > mi:
-                    still_pending.append((pred, made_at, r))
-            self._pending_preds = still_pending
-
-            # ---- adaptive prefetch for subsequent layers (§3.3) ----
-            pred_entry: Dict[int, object] = {}
+            self._score_pending_preds(mi, tops)
+            pred_entry = {}
             if ecfg.prefetch:
-                for r in rows:
-                    walk = self.predictor.adaptive_walk(h_host[r], mi,
-                                                        self.cache, self.loader.th)
-                    for pr, dec in walk:
-                        self.loader.enqueue_prefetch(pr.layer, pr.experts, dec)
-                        self._pending_preds.append((pr, mi, r))
-                        pred_entry[r] = pr
-                    # also record plain next-layer prediction for trace/sim
-                    nxt = self.predictor.predict_layers(h_host[r], mi, 1)
-                    if nxt:
-                        self._pending_preds.append((nxt[0], mi, r))
-                        pred_entry[r] = nxt[0]
+                pred_entry = self._prefetch_predictions(mi, rows, h_host,
+                                                        use_async=False)
 
             # ---- on-demand scoring + loading (union over slots) ----
             self.loader.new_layer()
@@ -365,10 +765,7 @@ class OffloadEngine:
                     is_hi = d_ == PREC_HI
                     slot = self.cache.lookup((mi, e), is_hi)
                     if slot is None:
-                        # a same-layer neighbour's admission evicted this
-                        # expert (union demand > pool) — reload on demand,
-                        # and count the re-fetch as a miss so hit_ratio
-                        # reflects real traffic under contention
+                        # union-overflow reload (see grouped path)
                         if is_hi:
                             self.cache.stats.misses_hi += 1
                         else:
@@ -377,6 +774,7 @@ class OffloadEngine:
                         self._fetch(mi, int(e), int(d_), slot)
                         self.loader.loaded_bytes += self.expert_bytes[int(d_)]
                         self.loader.n_loads[int(d_)] += 1
+                        self._union_reloads += 1
                     if self.ecfg.compute_mode == "host":
                         out = self._host_expert(mi, int(e), d_,
                                                 np.asarray(hr, np.float32))
@@ -394,11 +792,8 @@ class OffloadEngine:
                 if wsum > 0:
                     y = y / wsum                                # renormalize (skips)
                 y_rows.append(y)
-                pe = pred_entry.get(r)
-                row_trace[r].append(TraceLayer(
-                    experts=tops[r].tolist(), gate_vals=gates[r],
-                    pred_experts=pe.experts if (pe and pe.layer == mi + 1) else None,
-                    pred_gate_vals=pe.gate_vals if (pe and pe.layer == mi + 1) else None))
+                row_trace[r].append(self._trace_entry(mi, r, tops, gates,
+                                                      pred_entry))
             x = x + jnp.concatenate(y_rows, axis=0).astype(x.dtype)
 
         self.positions = self.positions + jnp.asarray(
@@ -407,6 +802,12 @@ class OffloadEngine:
             self.trace.append(row_trace[r])
         lg = self.model.logits(self.params, x)[:, 0]
         return np.asarray(lg, np.float32)
+
+    def close(self):
+        """Release the async scheduler's worker thread (also released
+        automatically when the engine is garbage-collected)."""
+        self.scheduler.flush()
+        self.scheduler.shutdown()
 
     def decode_token(self, token: int) -> np.ndarray:
         """One HOBBIT decode step (batch=1 legacy API).  Returns logits (V,)."""
@@ -464,11 +865,20 @@ class OffloadEngine:
         return nll / max(n, 1)
 
     def stats(self) -> Dict:
-        return {
-            "cache": self.cache.stats,
+        """Fully JSON-serializable engine counters: cache hit/miss/eviction
+        breakdown (with hit_ratio), loader traffic, predictor accuracy, and
+        the async scheduler's wall-clock stall/overlap accounting."""
+        s = {
+            "cache": self.cache.stats.to_dict(),
             "loads_hi": self.loader.n_loads[PREC_HI],
             "loads_lo": self.loader.n_loads[PREC_LO],
             "skips": self.loader.n_skips,
             "loaded_bytes": self.loader.loaded_bytes,
-            "pred_accuracy": self.predictor.accuracy(),
+            "pred_accuracy": {int(d): float(a)
+                              for d, a in self.predictor.accuracy().items()},
+            "gating_s": self._gating_s,
+            "expert_dispatches": self._expert_dispatches,
+            "union_reloads": self._union_reloads,
         }
+        s.update(self.scheduler.stats())
+        return s

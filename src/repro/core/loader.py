@@ -2,23 +2,37 @@
 Queue + Expert Scheduler.
 
 On a cache miss the Expert Scorer turns gate magnitudes into per-expert
-precision decisions (Eq. 2 + T1/T2); the scheduler drains the queue,
-fetching weights from host storage via a caller-provided fetch function and
-admitting them into the cache (which may evict).  On-demand tasks are
-blocking for the current layer; prefetch tasks are overlapped (their cost is
-accounted to the simulated timeline, not the critical path, when they finish
-before the layer that needs them begins — see simulator.py).
+precision decisions (Eq. 2 + T1/T2); the scheduler executes load tasks,
+fetching weights from host storage and admitting them into the cache (which
+may evict).  Two schedulers exist:
+
+  * ``DynamicExpertLoader.drain`` — the original synchronous scheduler (one
+    fetch per task on the caller's thread).  Kept as the reference path and
+    for the engine's legacy per-expert decode.
+  * ``AsyncExpertScheduler`` — the wall-clock-real scheduler: PREFETCH tasks
+    reserve their cache slot immediately (in-flight reservation, so nothing
+    can race them) and stage their weight bytes on a background executor
+    while the current layer computes (double-buffered staging); a
+    ``wait(layer)`` barrier commits staged writes before the layer that
+    needs them reads the pools.  ON_DEMAND tasks stay blocking but are
+    batched into a single scatter per pool tensor (``commit_fn``).
+
+The async scheduler shares the loader's cache and byte/load counters so
+`engine.stats()` is one source of truth either way.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
+import weakref
 from collections import deque
-from typing import Callable, Deque, List, Optional, Tuple
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.cache import MultidimensionalCache
+from repro.core.cache import CacheStarvation, MultidimensionalCache
 from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
                                 precision_decisions)
 
@@ -103,6 +117,12 @@ class DynamicExpertLoader:
                 self.queue.append(
                     LoadTask(layer, e, int(d), PREFETCH, self.bytes_fn(int(d))))
 
+    def take_queued(self) -> List[LoadTask]:
+        """Hand the queued tasks to an external scheduler (clears the queue)."""
+        tasks = list(self.queue)
+        self.queue.clear()
+        return tasks
+
     # ---------------- Expert Scheduler ----------------
     def drain(self, current_layer: int) -> List[Tuple[LoadTask, int]]:
         """Execute all queued tasks (on-demand first).  Returns
@@ -121,3 +141,178 @@ class DynamicExpertLoader:
             self.n_loads[t.precision] += 1
             done.append((t, slot))
         return done
+
+
+# --------------------------------------------------------------------------
+# asynchronous scheduler (double-buffered prefetch staging)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PrefetchJob:
+    tasks: List[Tuple[LoadTask, int]]       # (task, reserved slot)
+    future: Future                          # -> (staged, t_start, t_end)
+    t_submit: float
+
+
+class AsyncExpertScheduler:
+    """Executes load tasks so that prefetch copies overlap compute in wall
+    clock.
+
+    Division of labour with the engine:
+      stage_fn(layer, expert, precision) -> staged host buffers (the
+          host-side gather — the expensive part of the transfer — safe to run
+          on a background thread because it only *reads* host storage).
+      commit_fn(entries) with entries = [(task, slot, staged)] -> writes all
+          staged buffers into the device pools, one scatter per pool tensor
+          (main thread only, so pool arrays are never mutated concurrently
+          with compute).
+
+    Cache metadata is only ever touched on the main thread: prefetch
+    admission happens at submit time (with an in-flight reservation so
+    lookup/eviction can't race it); the background thread sees nothing but
+    host storage and its private staging buffers.
+    """
+
+    def __init__(self, loader: DynamicExpertLoader,
+                 stage_fn: Callable[[int, int, int], dict],
+                 commit_fn: Callable[[List[Tuple[LoadTask, int, dict]]], None],
+                 *, max_workers: int = 1):
+        self.loader = loader
+        self.cache = loader.cache
+        self.stage_fn = stage_fn
+        self.commit_fn = commit_fn
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="expert-prefetch")
+        # release the worker thread when the scheduler (engine) is collected
+        self._finalizer = weakref.finalize(self, self._pool.shutdown, False)
+        self._jobs: List[_PrefetchJob] = []
+        # observability (engine.stats() reads these)
+        self.stall_s = 0.0              # wall time load work blocked compute
+        self.copy_s = 0.0               # total staging-copy busy time
+        self.overlap_s = 0.0            # portion of copy_s hidden by compute
+        self.n_prefetch_jobs = 0
+        self.n_dropped_prefetch = 0     # dropped for slot pressure
+
+    # ---------------- prefetch (async, double-buffered) ----------------
+    def submit_prefetch(self, layer: int, experts: List[int],
+                        decisions: np.ndarray, *, current_layer: int) -> int:
+        """Reserve slots and start staging copies for predicted experts of a
+        future layer.  Returns the number of tasks actually submitted."""
+        tasks: List[Tuple[LoadTask, int]] = []
+        for e, d in zip(experts, decisions):
+            if d == PREC_SKIP:
+                continue
+            is_hi = d == PREC_HI
+            key = (layer, int(e))
+            if self.cache.lookup(key, is_hi) is not None:
+                continue                      # resident or already in flight
+            if not self.cache.can_admit(is_hi):
+                self.n_dropped_prefetch += 1  # slot pressure: skip, don't block
+                continue
+            slot, _ = self.cache.admit(key, is_hi, current_layer)
+            self.cache.begin_inflight(key, is_hi, slot)
+            t = LoadTask(layer, int(e), int(d), PREFETCH,
+                         self.loader.bytes_fn(int(d)))
+            tasks.append((t, slot))
+        if tasks:
+            fut = self._pool.submit(self._stage_job, [t for t, _ in tasks])
+            self._jobs.append(_PrefetchJob(tasks, fut, time.perf_counter()))
+            self.n_prefetch_jobs += 1
+        return len(tasks)
+
+    def _stage_job(self, tasks: List[LoadTask]):
+        t0 = time.perf_counter()
+        staged = [self.stage_fn(t.layer, t.expert, t.precision) for t in tasks]
+        return staged, t0, time.perf_counter()
+
+    # ---------------- barriers ----------------
+    def _collect_job(self, job: _PrefetchJob, entries: List,
+                     *, blocking_for_layer: bool):
+        t_wait = time.perf_counter()
+        staged, t0, t1 = job.future.result()
+        if blocking_for_layer:
+            self.stall_s += max(0.0, time.perf_counter() - t_wait)
+        busy = max(0.0, t1 - t0)
+        self.copy_s += busy
+        self.overlap_s += min(busy, max(0.0, t_wait - t0))
+        for (task, slot), buf in zip(job.tasks, staged):
+            is_hi = task.precision == PREC_HI
+            self.cache.end_inflight((task.layer, task.expert), is_hi)
+            # the reservation may have been flushed by a new_sequence between
+            # submit and commit; only write slots the entry still owns
+            if self.cache.lookup((task.layer, task.expert), is_hi) == slot:
+                entries.append((task, slot, buf))
+                self.loader.loaded_bytes += task.bytes
+                self.loader.n_loads[task.precision] += 1
+
+    def wait(self, layer: int):
+        """Barrier before computing `layer`: commit every finished job, and
+        block on (then commit) any in-flight job that targets `layer`.  All
+        collected jobs land in ONE batched pool scatter."""
+        remaining, entries = [], []
+        for job in self._jobs:
+            needed = any(t.layer == layer for t, _ in job.tasks)
+            if needed or job.future.done():
+                self._collect_job(job, entries, blocking_for_layer=needed)
+            else:
+                remaining.append(job)
+        self._jobs = remaining
+        if entries:
+            self.commit_fn(entries)
+
+    def wait_all(self):
+        entries = []
+        for job in self._jobs:
+            self._collect_job(job, entries, blocking_for_layer=False)
+        self._jobs = []
+        if entries:
+            self.commit_fn(entries)
+
+    def flush(self):
+        """Commit everything in flight (sequence/batch boundary)."""
+        self.wait_all()
+
+    # ---------------- on-demand (blocking, batched) ----------------
+    def drain_on_demand(self, tasks: List[LoadTask],
+                        current_layer: int) -> List[Tuple[LoadTask, int]]:
+        """Execute the current layer's miss set: one staging gather per task
+        on the caller's thread (these block compute — that's the stall the
+        stats record) and a single batched commit."""
+        t_start = time.perf_counter()
+        entries, done = [], []
+        for t in tasks:
+            is_hi = t.precision == PREC_HI
+            key = (t.layer, t.expert)
+            if self.cache.lookup(key, is_hi) is not None:
+                continue  # duplicate across batch slots / raced with prefetch
+            try:
+                slot, _ = self.cache.admit(key, is_hi, current_layer)
+            except CacheStarvation:
+                # every candidate victim is an in-flight prefetch: land them,
+                # clearing their reservations, then retry
+                self.wait_all()
+                slot, _ = self.cache.admit(key, is_hi, current_layer)
+            entries.append((t, slot, self.stage_fn(t.layer, t.expert,
+                                                   t.precision)))
+            self.loader.loaded_bytes += t.bytes
+            self.loader.n_loads[t.precision] += 1
+            done.append((t, slot))
+        if entries:
+            self.commit_fn(entries)
+        self.stall_s += time.perf_counter() - t_start
+        return done
+
+    # ---------------- observability ----------------
+    def stats(self) -> dict:
+        return {
+            "load_stall_s": self.stall_s,
+            "copy_s": self.copy_s,
+            "overlap_s": self.overlap_s,
+            "overlap_fraction": (self.overlap_s / self.copy_s
+                                 if self.copy_s > 0 else 0.0),
+            "prefetch_jobs": self.n_prefetch_jobs,
+            "dropped_prefetch": self.n_dropped_prefetch,
+        }
+
+    def shutdown(self):
+        self._finalizer()

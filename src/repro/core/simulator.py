@@ -99,6 +99,8 @@ class OffloadSimulator:
                                            cfg.lo_slots if system == "hobbit" else 0,
                                            weights)
         self.pending_prefetch_done_at = 0.0
+        self._stall_s = 0.0
+        self._transfer_s = 0.0
 
     def _bytes(self, prec: int) -> int:
         return self.cfg.hi_bytes if prec == PREC_HI else self.cfg.lo_bytes
@@ -108,16 +110,24 @@ class OffloadSimulator:
         t = 0.0
         per_token = []
         self.cache.new_sequence()
+        self._stall_s = 0.0         # transfer time on the critical path
+        self._transfer_s = 0.0      # total link-busy time issued
         for token in trace:
             t0 = t
             self.cache.advance_token()
             t = self._run_token(token, t)
             per_token.append(t - t0)
+        # same accounting the engine reports for the real wall clock:
+        # overlap_fraction = share of transfer time hidden behind compute
+        overlap = (max(0.0, 1.0 - self._stall_s / self._transfer_s)
+                   if self._transfer_s > 0 else 0.0)
         return {
             "total_s": t,
             "tok_per_s": len(trace) / t if t > 0 else float("inf"),
             "per_token_s": per_token,
             "stats": self.cache.stats,
+            "load_stall_s": self._stall_s,
+            "overlap_fraction": overlap,
         }
 
     # ------------------------------------------------------------------
@@ -133,6 +143,8 @@ class OffloadSimulator:
             if self.system == "dense_layerwise":
                 need = self.hw.load_s(self.cfg.hi_bytes) * self._experts_per_layer(token)
                 link_free_at = max(link_free_at, t) + need
+                self._transfer_s += need
+                self._stall_s += link_free_at - t
                 t = link_free_at
             else:
                 if self.system == "hobbit" and self.cfg.dynamic_loading:
@@ -148,6 +160,8 @@ class OffloadSimulator:
                     if slot is None:
                         link_free_at = max(link_free_at, t) + \
                             self.hw.load_s(self._bytes(d))
+                        self._transfer_s += self.hw.load_s(self._bytes(d))
+                        self._stall_s += link_free_at - t
                         t = link_free_at           # on-demand load blocks
                         self.cache.admit((li, e), is_hi, li)
 
@@ -173,8 +187,12 @@ class OffloadSimulator:
                     is_hi = d == PREC_HI
                     if self.cache.lookup((li + 1, e), is_hi) is None:
                         # issued at compute start, overlapped; occupies link
+                        # (no immediate stall — if it is still in flight when
+                        # the next layer's on-demand loads queue behind it,
+                        # the wait surfaces there as stall)
                         link_free_at = max(link_free_at, t) + \
                             self.hw.load_s(self._bytes(d))
+                        self._transfer_s += self.hw.load_s(self._bytes(d))
                         self.cache.admit((li + 1, e), is_hi, li)
                         self.cache.pin((li + 1, e), is_hi)
             t = compute_end

@@ -23,7 +23,7 @@ from repro.kernels import ref
 from repro.kernels.dequant_matmul import dequant_matmul_pallas
 from repro.kernels.flash_decode import flash_decode_pallas
 from repro.kernels.stacked_gating import stacked_gating_pallas
-from repro.quant.quantize import PACK_FACTOR, QTensor
+from repro.quant.quantize import PACK_FACTOR, QTensor, dequantize
 
 
 def _on_tpu() -> bool:
@@ -61,6 +61,39 @@ def dequant_matmul(x, q: QTensor, *, mode: str = "auto",
         x2, data, scale, bits=q.bits, group_size=q.group_size,
         block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return out[:m, :n].reshape(*lead, n)
+
+
+def grouped_dequant_matmul(x, data, scale, *, bits: int, group_size: int,
+                           mode: str = "auto",
+                           block_m: int = 128, block_n: int = 128,
+                           block_k: int = 256):
+    """Batched per-expert fused dequant GEMM: y[p] = x[p] @ dequant(data[p]).
+
+    This is the grouped-decode hot path: every active (token row, expert)
+    pair of a MoE layer becomes one slice p, so the whole layer's low-
+    precision expert compute is a single dispatch instead of O(batch*top_k)
+    tiny calls.
+
+        x      (P, K)             activations, one row per pair
+        data   (P, K // pack, N)  packed codes gathered from the lo pool
+        scale  (P, K // group, N) groupwise scales
+        out    (P, N)             f32
+
+    On TPU the 2-D fused kernel is vmapped over the pair axis (one kernel
+    launch with a batch grid dimension); elsewhere the reference dequant +
+    einsum path runs (one XLA dispatch either way)."""
+    if mode == "xla" or (mode == "auto" and not _on_tpu()):
+        q = QTensor(data, scale, bits, group_size, x.shape[-1])
+        w = dequantize(q)                       # (P, K, N) f32
+        return jnp.einsum("pk,pkn->pn", x.astype(jnp.float32), w,
+                          preferred_element_type=jnp.float32)
+
+    def one(xp, dp, sp):
+        q = QTensor(dp, sp, bits, group_size, xp.shape[-1])
+        return dequant_matmul(xp[None], q, mode=mode, block_m=block_m,
+                              block_n=block_n, block_k=block_k)[0]
+
+    return jax.vmap(one)(x, data, scale)
 
 
 def stacked_gating(x, gates, *, mode: str = "auto", block_d: int = 512):

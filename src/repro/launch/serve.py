@@ -124,15 +124,21 @@ def main():
             lo_bytes=expert_nbytes(base.d_model, base.moe.d_ff_expert, 4))
         sim = simulate_systems(eng.trace, eng.num_moe_layers, hw, sim_cfg)
         report.update({
-            "cache_hit_ratio": round(stats["cache"].hit_ratio(), 3),
+            "cache_hit_ratio": round(stats["cache"]["hit_ratio"], 3),
             "loads": {"hi": stats["loads_hi"], "lo": stats["loads_lo"],
                       "skips": stats["skips"]},
             "pred_accuracy": stats["pred_accuracy"],
+            # wall-clock loading observability (engine.stats() contract)
+            "load_stall_s": round(stats["load_stall_s"], 4),
+            "overlap_fraction": round(stats["overlap_fraction"], 3),
+            "gating_s": round(stats["gating_s"], 4),
             "simulated_decode_tok_s": {k: round(v["tok_per_s"], 2)
                                        for k, v in sim.items()},
+            "simulated_overlap_fraction": {k: round(v["overlap_fraction"], 3)
+                                           for k, v in sim.items()},
             "hw_profile": hw.name,
         })
-    print(json.dumps(report, default=str))
+    print(json.dumps(report))
 
 
 if __name__ == "__main__":

@@ -160,8 +160,12 @@ class DenseBackend:
         return np.asarray(logits, np.float32)
 
     def stats(self) -> dict:
+        # load_stall_s / overlap_fraction are part of the uniform backend
+        # stats contract (schedulers attribute stall to requests); resident
+        # weights never stall on expert transfers
         return {"backend": "dense", "batch": self.batch,
-                "max_len": self.max_len}
+                "max_len": self.max_len,
+                "load_stall_s": 0.0, "overlap_fraction": 0.0}
 
 
 # --------------------------------------------------------------------------

@@ -38,6 +38,7 @@ class Request:
     queue_wait_s: float = 0.0       # submit -> admission into a slot
     prefill_latency_s: float = 0.0  # this request's own prefill (join) time
     decode_s: float = 0.0           # wall time of decode steps it rode in
+    load_stall_s: float = 0.0       # share of expert-load stall in its steps
     total_latency_s: float = 0.0
 
 
@@ -88,6 +89,7 @@ class BatchingServer:
         outs: Dict[int, List[int]] = {}
         pending_tok: Dict[int, int] = {}
         step_idx = 0
+        last_stall = self.backend.stats().get("load_stall_s", 0.0)
 
         def retire(slot: int):
             req = active.pop(slot)
@@ -128,9 +130,15 @@ class BatchingServer:
             t0 = time.time()
             logits = self.backend.step(tokens)
             dt = time.time() - t0
+            # expert-load stall accrued this step, split across the requests
+            # that rode in it (offload backends only; dense reports 0)
+            now_stall = self.backend.stats().get("load_stall_s", 0.0)
+            stall = (now_stall - last_stall) / len(stepping)
+            last_stall = now_stall
             nxt = self._sample(logits)
             for slot in stepping:
                 active[slot].decode_s += dt
+                active[slot].load_stall_s += stall
                 outs[slot].append(int(nxt[slot]))
                 pending_tok[slot] = int(nxt[slot])
             self._step_time_s += dt
@@ -142,14 +150,17 @@ class BatchingServer:
         if not self.completed:
             return {}
         done = self.completed
+        backend_stats = self.backend.stats()
         return {
             "requests": len(done),
             "mean_queue_wait_s": float(np.mean([r.queue_wait_s for r in done])),
             "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in done])),
             "mean_decode_s": float(np.mean([r.decode_s for r in done])),
+            "mean_load_stall_s": float(np.mean([r.load_stall_s for r in done])),
             "mean_total_s": float(np.mean([r.total_latency_s for r in done])),
             # decode throughput over decode-step wall time only (queue wait
             # and prefill are reported separately above)
             "decode_tok_s": self._step_tokens / max(self._step_time_s, 1e-9),
-            "backend": self.backend.stats(),
+            "overlap_fraction": backend_stats.get("overlap_fraction", 0.0),
+            "backend": backend_stats,
         }
