@@ -87,6 +87,68 @@ def wall_clock_rows(kind, model, params, *, batch=4, steps=24):
     ]
 
 
+def mixed_length_serving_rows(kind, model, params, *, smoke):
+    """Continuous serving of a mixed-length workload (prompts 16-512 tokens)
+    under a FIXED device KV budget: the dense allocator charges every slot
+    max_len up front, so the budget caps it at `budget_slots` concurrent
+    requests; the paged allocator (same bytes, 64-token pages) lets short
+    requests pack many more slots.  The row to watch is
+    `serving_occupancy_gain` — sustained concurrent-slot occupancy of paged
+    vs dense (acceptance target >= 1.5x)."""
+    from repro.serving.api import DenseBackend
+    from repro.serving.batching import BatchingServer, Request
+
+    page, max_len = 64, 576             # 512-token prompts + decode headroom
+    budget_slots = 4                    # dense slots the KV budget affords
+    pool_pages = budget_slots * (-(-max_len // page))   # same byte budget
+    plens = [16, 32, 512, 64, 48, 96, 24, 128, 16, 32, 64, 48]
+    n_req = 12 if smoke else 24
+    new_toks = 12
+    vocab = model.cfg.vocab_size
+
+    def workload():
+        rng = np.random.default_rng(13)
+        return [Request(rid=i, prompt=rng.integers(0, vocab,
+                                                   plens[i % len(plens)]),
+                        max_new_tokens=new_toks) for i in range(n_req)]
+
+    def serve(paged):
+        be = DenseBackend(model, params, paged=paged, page_size=page,
+                          kv_pages=pool_pages if paged else None)
+        srv = BatchingServer(be, max_batch=3 * budget_slots if paged
+                             else budget_slots, max_len=max_len, admit_k=6)
+        for r in workload():
+            srv.submit(r)
+        t0 = time.perf_counter()
+        srv.run()
+        dt = time.perf_counter() - t0
+        return srv.stats(), dt
+
+    dense, dt_d = serve(paged=False)
+    paged, dt_p = serve(paged=True)
+    gain = paged["mean_occupancy"] / dense["mean_occupancy"]
+    return [
+        (f"serving_kv_budget[{kind}]", pool_pages,
+         f"KV pages ({page} tok) = {budget_slots} dense slots @ {max_len}"),
+        (f"serving_occupancy[{kind}][dense]",
+         round(dense["mean_occupancy"], 2),
+         f"mean live slots/step, dense (B,max_len) allocator, cap {budget_slots}"),
+        (f"serving_occupancy[{kind}][paged]",
+         round(paged["mean_occupancy"], 2),
+         "mean live slots/step, paged pool, same KV bytes"),
+        (f"serving_occupancy_gain[{kind}]", round(gain, 2),
+         "paged vs dense sustained occupancy (target >= 1.5x)"),
+        (f"serving_admission_wait_s[{kind}][dense]",
+         round(dense["admission_wait_s"], 3), "submit -> first token, dense"),
+        (f"serving_admission_wait_s[{kind}][paged]",
+         round(paged["admission_wait_s"], 3), "submit -> first token, paged"),
+        (f"serving_wall_s[{kind}][dense]", round(dt_d, 2),
+         f"{n_req} mixed-length requests end to end"),
+        (f"serving_wall_s[{kind}][paged]", round(dt_p, 2),
+         f"{n_req} mixed-length requests end to end"),
+    ]
+
+
 def run(smoke: bool = False):
     rows = []
     kinds = ("mixtral-smoke",) if smoke else ("mixtral-smoke", "phi-smoke")
@@ -94,6 +156,9 @@ def run(smoke: bool = False):
         model, params = common.get_trained(kind)
         rows.extend(wall_clock_rows(kind, model, params, batch=4,
                                     steps=8 if smoke else 24))
+        if kind == "mixtral-smoke":
+            rows.extend(mixed_length_serving_rows(kind, model, params,
+                                                  smoke=smoke))
         seqs = common.eval_token_stream(2 if smoke else 4)
         e = model.cfg.moe.num_experts
         n_entities = model.cfg.num_layers * e

@@ -4,6 +4,29 @@ per-sequence record resets.
 
 The manager tracks *metadata only* (slot table, usage records); the engine
 owns the device buffers and writes weights into the slot the manager assigns.
+
+In-flight reservation state machine (one (key, precision) entry)::
+
+            admit()                  begin_inflight(key, slot)
+    absent ────────▶ resident ─────────────────────▶ resident+IN-FLIGHT
+       ▲                │  ▲                               │
+       │   _select_victim  └── end_inflight(key) ◀─────────┘
+       └── (eviction)      (bytes landed; entry is an ordinary resident)
+
+  * RESIDENT — owns a slot; evictable by Eq. 3 priority unless pinned.
+  * RESIDENT+IN-FLIGHT — owns a slot but its weight bytes are still being
+    staged by the async scheduler: `_select_victim` NEVER picks it (a
+    staged write must not land on a reassigned slot) and compute must
+    `wait()` before reading the slot.
+  * Soft pins (predicted experts) yield under slot pressure; hard pins
+    (the experts of the layer currently executing) never do.  If every
+    resident is in flight, admission raises `CacheStarvation` and the
+    caller drains the scheduler (clearing reservations) and retries.
+
+Lifecycle hooks: `new_sequence()` resets records and pins at batch
+boundaries; `advance_token()` clears pins each decode step.  See
+docs/ARCHITECTURE.md for where this sits in the decode loop and
+core/loader.py for the scheduler half of the handshake.
 """
 
 from __future__ import annotations

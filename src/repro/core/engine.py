@@ -67,6 +67,14 @@ class EngineConfig:
     # stage prefetch copies on a background executor so they overlap compute
     # in wall clock (double-buffered).  False drains them synchronously.
     async_prefetch: bool = True
+    # paged KV cache: slots draw kv_page_size-token pages from a shared pool
+    # of kv_pages pages (None = the dense equivalent, batch*ceil(max_len/
+    # page)) instead of each slot allocating max_len up front; prompts then
+    # prefill in prefill_chunk-token chunks (see models/kv_pages.py).
+    paged_kv: bool = False
+    kv_page_size: int = 64
+    kv_pages: Optional[int] = None
+    prefill_chunk: int = 64
 
 
 class OffloadEngine:
@@ -149,6 +157,9 @@ class OffloadEngine:
         self.batch = 1
         self.max_len = 0
         self.active = np.ones((1,), bool)
+        self.kv_pool = None             # PagedKVPool when ecfg.paged_kv
+        self._admission = None          # ChunkedPrefill when ecfg.paged_kv
+        self._pending_joins = {}        # dense-path incremental admissions
 
     # ------------------------------------------------------------------
     # device transfer
@@ -272,6 +283,39 @@ class OffloadEngine:
         out, new_cache = L.attn_decode(p["attn"], h, cache, positions, cfg, "attn")
         return x + out, new_cache
 
+    def _attn_step_paged(self, p, x, kp, vp, table, positions, active):
+        """Paged-KV attention step: same residual math as `_attn_step`, but
+        K/V scatter/gather through the shared page pool."""
+        cfg = self.cfg
+        h = L.apply_norm(p["pre_norm"], x, cfg)
+        out, kp, vp = L.paged_attn_decode(p["attn"], h, kp, vp, table,
+                                          positions, active, cfg)
+        return x + out, kp, vp
+
+    def _attn_layer(self, li: int, x, *, table=None, active_dev=None):
+        """Run layer li's attention against whichever KV layout is active,
+        updating the layout's state in place.  Returns the residual stream."""
+        p = self.layer_params[li]
+        if self.ecfg.paged_kv:
+            # page buffers donated: rebound to the outputs right below
+            fn = self._jit("attn_paged", self._attn_step_paged,
+                           donate=(2, 3))
+            x, kp, vp = fn(p, x, self.kv_pool.k[li], self.kv_pool.v[li],
+                           table, self.positions, active_dev)
+            self.kv_pool.k[li], self.kv_pool.v[li] = kp, vp
+            return x
+        fn = self._jit("attn", self._attn_step)
+        x, self.kv_cache[li] = fn(p, x, self.kv_cache[li], self.positions)
+        return x
+
+    def _paged_step_prologue(self, rows):
+        """Grow every active slot's page chain for the token about to be
+        written and export the page table once per step."""
+        pos = np.asarray(self.positions)
+        for r in rows:
+            self.kv_pool.ensure(r, int(pos[r]) + 1)
+        return self.kv_pool.table_device(), jnp.asarray(self.active)
+
     def _ffn_input(self, p, x):
         return L.apply_norm(p["ffn_norm"], x, self.cfg)
 
@@ -357,9 +401,9 @@ class OffloadEngine:
         y = jnp.where(wsum > 0, y / jnp.where(wsum > 0, wsum, 1.0), 0.0)
         return y[:, None, :]                                # (B, 1, D)
 
-    def _jit(self, name, fn):
+    def _jit(self, name, fn, donate=()):
         if name not in self._jit_cache:
-            self._jit_cache[name] = jax.jit(fn)
+            self._jit_cache[name] = jax.jit(fn, donate_argnums=donate)
         return self._jit_cache[name]
 
     # ------------------------------------------------------------------
@@ -373,16 +417,28 @@ class OffloadEngine:
         self.max_len = max_len
         self.scheduler.flush()          # land any cross-batch in-flight loads
         self.cache.new_sequence()
-        self.kv_cache = [
-            {"k": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
-                             self.cfg.resolved_head_dim), self.dtype),
-             "v": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
-                             self.cfg.resolved_head_dim), self.dtype)}
-            for _ in range(self.cfg.num_layers)]
+        if self.ecfg.paged_kv:
+            from repro.models.kv_pages import ChunkedPrefill
+            self.kv_cache = None
+            self.kv_pool = self.model.init_cache(
+                batch, max_len, paged=True,
+                page_size=self.ecfg.kv_page_size,
+                num_pages=self.ecfg.kv_pages)
+            self._admission = ChunkedPrefill(self.model, self.params,
+                                             self.kv_pool,
+                                             chunk=self.ecfg.prefill_chunk)
+        else:
+            self.kv_cache = [
+                {"k": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
+                                 self.cfg.resolved_head_dim), self.dtype),
+                 "v": jnp.zeros((batch, max_len, self.cfg.num_kv_heads,
+                                 self.cfg.resolved_head_dim), self.dtype)}
+                for _ in range(self.cfg.num_layers)]
         self.positions = jnp.zeros((batch,), jnp.int32)
         self.active = np.ones((batch,), bool)
         self.trace = []
         self._pending_preds = []        # (Prediction, made_at_layer, slot)
+        self._pending_joins = {}        # abandoned admissions don't leak
 
     def start_sequence(self, max_len: int, batch: int = 1):
         self.start_batch(batch, max_len)
@@ -419,6 +475,17 @@ class OffloadEngine:
         prompts = np.asarray(prompts, np.int32)
         b, s = prompts.shape
         assert b == self.batch, (b, self.batch)
+        if self.ecfg.paged_kv:
+            # chunked prefill through the page pool, still dense compute
+            for r in range(b):
+                self._admission.begin(r, prompts[r],
+                                      reserve_tokens=self.max_len)
+            done = {}
+            while len(done) < b:
+                done.update(self._admission.step())
+            self.positions = jnp.full((b,), s, jnp.int32)
+            self.active[:] = True
+            return np.stack([done[r] for r in range(b)])
         batch = Batch(tokens=jnp.asarray(prompts),
                       loss_mask=jnp.ones((b, s), jnp.float32))
         logits, cache, positions = self._prefill_fn()(self.params, batch)
@@ -428,10 +495,22 @@ class OffloadEngine:
         return np.asarray(logits, np.float32)
 
     def join(self, slot: int, prompt) -> np.ndarray:
-        """Admit one request into a free slot mid-flight: batch=1 prefill,
-        scatter its KV into the slot's cache rows.  Returns logits (V,)."""
+        """Admit one request into a free slot mid-flight (blocking): batch=1
+        prefill, KV written into the slot's cache rows (dense) or its pages
+        (paged).  Returns logits (V,)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert 0 <= slot < self.batch, (slot, self.batch)
+        if self.ecfg.paged_kv:
+            # concurrently pending join_begin admissions advance alongside;
+            # their finished logits stay claimable by the next join_step
+            lg = self._admission.run(slot, prompt,
+                                     reserve_tokens=self.max_len)
+            self.positions = self.positions.at[slot].set(
+                int(self.kv_pool.lens[slot]))
+            self.active[slot] = True
+            self._pending_preds = [pp for pp in self._pending_preds
+                                   if pp[2] != slot]
+            return lg
         batch = Batch(tokens=jnp.asarray(prompt[None]),
                       loss_mask=jnp.ones((1, len(prompt)), jnp.float32))
         logits, cache, positions = self._prefill_fn()(self.params, batch)
@@ -446,11 +525,52 @@ class OffloadEngine:
                                if pp[2] != slot]
         return np.asarray(logits[0], np.float32)
 
+    def join_begin(self, slot: int, prompt, reserve_tokens=None):
+        """Start an incremental admission into `slot`.  Paged KV: reserves
+        pages for `reserve_tokens` (default max_len) and queues the prompt
+        for chunked prefill.  Dense KV: stashes the prompt (join_step then
+        runs the one-shot prefill)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.ecfg.paged_kv:
+            self._admission.begin(slot, prompt,
+                                  reserve_tokens=reserve_tokens or self.max_len)
+        else:
+            self._pending_joins[slot] = prompt
+
+    def join_step(self) -> Dict[int, np.ndarray]:
+        """Advance every in-progress admission one prefill chunk (ONE shared
+        jitted call under paged KV); completed slots become active.  Returns
+        {slot: last-token logits}."""
+        if self.ecfg.paged_kv:
+            done = self._admission.step()
+            for slot in done:
+                plen = int(self.kv_pool.lens[slot])
+                self.positions = self.positions.at[slot].set(plen)
+                self.active[slot] = True
+                self._pending_preds = [pp for pp in self._pending_preds
+                                       if pp[2] != slot]
+            return done
+        done = {}
+        for slot, prompt in list(self._pending_joins.items()):
+            del self._pending_joins[slot]
+            done[slot] = self.join(slot, prompt)
+        return done
+
+    def can_admit(self, tokens: int) -> bool:
+        """KV-capacity admission gate: paged KV checks unreserved pages;
+        dense KV always admits (slots are pre-allocated to max_len)."""
+        if self.ecfg.paged_kv and self.kv_pool is not None:
+            return self.kv_pool.can_reserve(tokens)
+        return True
+
     def release(self, slot: int):
-        """Free a slot (its KV rows become junk until the next join)."""
+        """Free a slot (its KV rows become junk until the next join; paged
+        KV returns the slot's pages to the pool)."""
         self.active[slot] = False
         self._pending_preds = [pp for pp in self._pending_preds
                                if pp[2] != slot]
+        if self.ecfg.paged_kv and self.kv_pool is not None:
+            self.kv_pool.release(slot)
 
     # ---------------- batched HOBBIT decode ----------------
     def decode_step_batch(self, tokens) -> np.ndarray:
@@ -556,18 +676,19 @@ class OffloadEngine:
         if cfg.scale_embedding:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
 
-        attn_step = self._jit("attn", self._attn_step)
         ffn_in = self._jit("ffn_in", self._ffn_input)
         gate_fn = self._jit("gate", lambda h2, w: h2 @ w)
         grouped_ffn = self._jit("grouped_ffn", self._grouped_ffn)
         combine_fn = self._jit("residual_add",
                                lambda xx, yy: xx + yy.astype(xx.dtype))
 
+        table = active_dev = None
+        if ecfg.paged_kv:
+            table, active_dev = self._paged_step_prologue(rows)
         row_trace = {r: [] for r in rows}
         for mi, li in enumerate(self.moe_layers):
             p = self.layer_params[li]
-            x, self.kv_cache[li] = attn_step(p, x, self.kv_cache[li],
-                                             self.positions)
+            x = self._attn_layer(li, x, table=table, active_dev=active_dev)
             h = ffn_in(p, x)                                   # (B,1,D)
 
             # ---- gating: ONE (B,D)@(D,E) matmul from the stacked routers --
@@ -714,15 +835,17 @@ class OffloadEngine:
         if cfg.scale_embedding:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
 
-        attn_step = self._jit("attn", self._attn_step)
         ffn_in = self._jit("ffn_in", self._ffn_input)
         hi_exp = self._jit("hi", self._hi_expert)
         lo_exp = self._jit("lo", self._lo_expert)
 
+        table = active_dev = None
+        if ecfg.paged_kv:
+            table, active_dev = self._paged_step_prologue(rows)
         row_trace = {r: [] for r in rows}
         for mi, li in enumerate(self.moe_layers):
             p = self.layer_params[li]
-            x, self.kv_cache[li] = attn_step(p, x, self.kv_cache[li], self.positions)
+            x = self._attn_layer(li, x, table=table, active_dev=active_dev)
             h = ffn_in(p, x)                                   # (B,1,D)
             h_host = np.asarray(h[:, 0], np.float32)           # (B,D)
 
@@ -879,6 +1002,10 @@ class OffloadEngine:
             "gating_s": self._gating_s,
             "expert_dispatches": self._expert_dispatches,
             "union_reloads": self._union_reloads,
+            # KV page-pool pressure (zeros under the dense KV layout)
+            "kv_pages_used": 0, "kv_pages_total": 0, "kv_page_fraction": 0.0,
         }
+        if self.ecfg.paged_kv and self.kv_pool is not None:
+            s.update(self.kv_pool.stats())
         s.update(self.scheduler.stats())
         return s

@@ -17,8 +17,27 @@ may evict).  Two schedulers exist:
     needs them reads the pools.  ON_DEMAND tasks stay blocking but are
     batched into a single scatter per pool tensor (``commit_fn``).
 
-The async scheduler shares the loader's cache and byte/load counters so
-`engine.stats()` is one source of truth either way.
+AsyncExpertScheduler lifecycle of one prefetched expert::
+
+    submit_prefetch(layer, experts, decisions)        [main thread]
+        -> cache.admit() assigns a slot NOW            "reserve"
+        -> cache.begin_inflight(key, slot)             eviction-proof
+        -> executor stages host bytes in background    overlaps compute
+    wait(layer)  (barrier before the layer runs)      [main thread]
+        -> future.result() (blocks only if the copy is late -> stall_s)
+        -> cache.end_inflight(key)                     "commit" begins
+        -> commit_fn(entries): ONE batched scatter per pool tensor
+    (wait_all()/flush() at sequence boundaries commit leftovers without
+    attributing stall)
+
+Invariants: cache metadata is touched ONLY on the main thread; the
+background worker sees host storage and private staging buffers, never the
+pools; an in-flight entry owns its slot from submit to commit, so a staged
+write can never land on a reassigned slot (see core/cache.py for the
+reservation state machine).  The async scheduler shares the loader's cache
+and byte/load counters so `engine.stats()` is one source of truth either
+way.  Metric definitions: docs/METRICS.md; system map:
+docs/ARCHITECTURE.md.
 """
 
 from __future__ import annotations

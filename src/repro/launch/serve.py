@@ -64,6 +64,20 @@ def main():
                          "generate call")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="scheduler slots for --serve-requests")
+    ap.add_argument("--paged-kv", action="store_true",
+                    help="paged KV cache: slots draw pages from a shared "
+                         "pool instead of each allocating max_len up front "
+                         "(either backend; all-'attn' archs)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (--paged-kv)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="KV pool size in pages (--paged-kv; default: the "
+                         "dense equivalent, batch * ceil(max_len/page))")
+    ap.add_argument("--prefill-chunk", type=int, default=64,
+                    help="tokens per chunked-prefill call (--paged-kv)")
+    ap.add_argument("--admit-k", type=int, default=4,
+                    help="max requests prefilling concurrently in the "
+                         "scheduler (--serve-requests)")
     ap.add_argument("--hi-slots", type=int, default=16)
     ap.add_argument("--lo-slots", type=int, default=8)
     ap.add_argument("--t1", type=float, default=0.6)
@@ -86,16 +100,22 @@ def main():
 
     if kind == "hobbit":
         assert cfg.moe is not None, "--backend hobbit requires a MoE arch"
-    backend = make_backend(kind, model, params, engine_config=EngineConfig(
-        hi_slots=args.hi_slots, lo_slots=args.lo_slots,
-        thresholds=Thresholds(args.t1, args.t2)) if kind == "hobbit" else None)
+    backend = make_backend(
+        kind, model, params,
+        engine_config=EngineConfig(
+            hi_slots=args.hi_slots, lo_slots=args.lo_slots,
+            thresholds=Thresholds(args.t1, args.t2))
+        if kind == "hobbit" else None,
+        paged=args.paged_kv, page_size=args.page_size,
+        kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk)
 
     rng = np.random.default_rng(0)
-    report = {"backend": kind}
+    report = {"backend": kind, "paged_kv": args.paged_kv}
 
     if args.serve_requests > 0:
         srv = BatchingServer(backend, max_batch=args.max_batch,
-                             max_len=args.prompt_len * 2 + args.new_tokens + 8)
+                             max_len=args.prompt_len * 2 + args.new_tokens + 8,
+                             admit_k=args.admit_k)
         for i in range(args.serve_requests):
             plen = args.prompt_len * (1 + i % 2)
             srv.submit(Request(

@@ -1,0 +1,295 @@
+"""Paged KV cache: a fixed device-resident page pool shared by all serving
+slots, so a slot's KV memory grows with its *actual* length instead of every
+slot paying for the batch's ``max_len``.
+
+Mirrors how the HOBBIT engine treats expert memory (a pooled resource whose
+slots are dynamically assigned) and applies the same idea to the other big
+serving allocation, the KV cache:
+
+  * ``PagedKVPool`` owns, per transformer layer, K and V buffers of shape
+    ``(num_pages, page_size, num_kv_heads, head_dim)`` plus host-side
+    metadata: a per-slot page table (logical page index -> physical page id),
+    a free list, and per-slot admission *reservations* so a request admitted
+    into a slot can always grow to its declared total length even while other
+    requests are being admitted concurrently.
+  * The jit-facing view is purely functional: ``table_device()`` exports the
+    page table as an int32 ``(batch, max_pages_per_slot)`` array, and the
+    paged attention kernels (``layers.paged_attn_decode`` /
+    ``layers.paged_attn_prefill_chunk``) gather/scatter through it, returning
+    updated page buffers that the host writes back.
+  * ``release(slot)`` returns the slot's pages to the free list, so the next
+    queued request can be admitted mid-flight without reallocating anything —
+    the continuous-batching analogue of the engine's expert-slot eviction.
+
+``ChunkedPrefill`` is the shared admission driver: it feeds prompts through
+``model.prefill_chunk_paged`` in fixed-size chunks (one *batched* jitted call
+per chunk covering every request currently being admitted) so long prompts
+never stall in-flight decodes.  Both ``DenseBackend`` and the
+``OffloadEngine`` use it.
+
+See ``docs/ARCHITECTURE.md`` for how this fits the request lifecycle.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class PagePoolExhausted(RuntimeError):
+    """Raised when a page allocation or reservation cannot be satisfied.
+
+    Admission-time callers (the batching scheduler) treat this as "the
+    request must wait for pages"; hitting it *mid-decode* indicates the
+    caller admitted a request without reserving its full length."""
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Number of pages needed to hold `tokens` KV entries."""
+    return -(-int(tokens) // page_size) if tokens > 0 else 0
+
+
+class PagedKVPool:
+    """Fixed device-resident KV page pool with per-slot page tables.
+
+    The pool is sized once (``num_pages`` pages of ``page_size`` tokens per
+    layer); serving slots draw pages on demand and return them on release.
+    All metadata lives on the host (plain python/numpy — allocation is a
+    per-token-batch, not per-element, operation); only the page buffers and
+    the exported page table touch the device.
+    """
+
+    def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
+                 dtype, num_pages: int, page_size: int = 64,
+                 max_pages_per_slot: int = 0):
+        """max_pages_per_slot bounds one slot's logical length (defaults to
+        the whole pool); it is the width of the exported page table."""
+        self.num_layers = num_layers
+        self.page_size = int(page_size)
+        self.num_pages = int(num_pages)
+        self.max_pages_per_slot = int(max_pages_per_slot or num_pages)
+        self.k: List[jax.Array] = [
+            jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype)
+            for _ in range(num_layers)]
+        self.v: List[jax.Array] = [
+            jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype)
+            for _ in range(num_layers)]
+        self.batch = 0
+        self.free: List[int] = list(range(self.num_pages))
+        self.table = np.zeros((0, self.max_pages_per_slot), np.int32)
+        self.owned: List[List[int]] = []
+        self.lens = np.zeros((0,), np.int64)
+        self.reserved = np.zeros((0,), np.int64)   # pages promised, not drawn
+        self._table_dev = None
+
+    # ------------- batch lifecycle -------------
+    def start(self, batch: int):
+        """Reset metadata for a new batch of `batch` slots (buffers are
+        reused; stale page contents are dead because reads are masked by
+        each slot's position)."""
+        self.batch = batch
+        self.free = list(range(self.num_pages))
+        self.table = np.zeros((batch, self.max_pages_per_slot), np.int32)
+        self.owned = [[] for _ in range(batch)]
+        self.lens = np.zeros((batch,), np.int64)
+        self.reserved = np.zeros((batch,), np.int64)
+        self._table_dev = None
+
+    # ------------- admission reservations -------------
+    def reservable_pages(self) -> int:
+        """Pages available to NEW admissions: free pages minus pages already
+        promised to in-flight slots' future growth."""
+        return len(self.free) - int(self.reserved.sum())
+
+    def fits(self, tokens: int) -> bool:
+        """True iff a request of `tokens` total KV entries can EVER be
+        served by this pool (page-table width and pool size); False means
+        waiting will not help — reject, don't queue."""
+        need = pages_for(tokens, self.page_size)
+        return need <= min(self.max_pages_per_slot, self.num_pages)
+
+    def can_reserve(self, tokens: int) -> bool:
+        """True iff a request needing `tokens` total KV entries can be
+        admitted now without ever starving an already-admitted slot (False
+        for requests that exceed the per-slot table width or the pool —
+        those can never be admitted; see `fits`)."""
+        if not self.fits(tokens):
+            return False
+        return pages_for(tokens, self.page_size) <= self.reservable_pages()
+
+    def reserve(self, slot: int, tokens: int):
+        """Promise `tokens` total KV entries to `slot` (its prompt plus its
+        decode budget).  Raises PagePoolExhausted if the promise cannot be
+        kept, and ValueError if it exceeds the slot's page-table width."""
+        need = pages_for(tokens, self.page_size)
+        if need > self.max_pages_per_slot:
+            raise ValueError(
+                f"request needs {need} pages > max_pages_per_slot="
+                f"{self.max_pages_per_slot} (max_len bound)")
+        if need > self.num_pages:
+            raise PagePoolExhausted(
+                f"request needs {need} pages > pool size {self.num_pages}")
+        extra = need - len(self.owned[slot])
+        if extra > self.reservable_pages() + int(self.reserved[slot]):
+            raise PagePoolExhausted(
+                f"slot {slot}: {extra} pages wanted, "
+                f"{self.reservable_pages()} reservable")
+        self.reserved[slot] = max(int(self.reserved[slot]), extra)
+
+    # ------------- allocation -------------
+    def ensure(self, slot: int, length: int):
+        """Grow `slot` to cover `length` tokens, drawing pages from the free
+        list (the slot's own reservation first).  No-op if already covered."""
+        target = pages_for(length, self.page_size)
+        if target > self.max_pages_per_slot:
+            raise ValueError(
+                f"slot {slot}: length {length} exceeds max_pages_per_slot")
+        own = self.owned[slot]
+        while len(own) < target:
+            if not self.free:
+                raise PagePoolExhausted(
+                    f"slot {slot}: pool exhausted growing to {length} tokens "
+                    "(admit with reserve() to prevent this)")
+            pid = self.free.pop()
+            self.table[slot, len(own)] = pid
+            own.append(pid)
+            if self.reserved[slot] > 0:
+                self.reserved[slot] -= 1
+            self._table_dev = None
+        self.lens[slot] = max(int(self.lens[slot]), int(length))
+
+    def release(self, slot: int):
+        """Return the slot's pages to the pool and drop its reservation —
+        the next queued request can draw them immediately."""
+        self.free.extend(self.owned[slot])
+        self.owned[slot] = []
+        self.lens[slot] = 0
+        self.reserved[slot] = 0
+        self._table_dev = None
+
+    # ------------- jit-facing views -------------
+    def table_device(self) -> jax.Array:
+        """Page table as a device int32 (batch, max_pages_per_slot) array
+        (cached until the table changes)."""
+        if self._table_dev is None:
+            self._table_dev = jnp.asarray(self.table)
+        return self._table_dev
+
+    # ------------- observability -------------
+    @property
+    def pages_used(self) -> int:
+        """Physical pages currently owned by some slot."""
+        return self.num_pages - len(self.free)
+
+    @property
+    def page_fraction(self) -> float:
+        """pages_used / num_pages — the pool-pressure gauge."""
+        return self.pages_used / self.num_pages if self.num_pages else 0.0
+
+    def stats(self) -> Dict[str, float]:
+        """JSON-serializable pool counters (backend stats() contract keys)."""
+        return {
+            "kv_pages_used": self.pages_used,
+            "kv_pages_total": self.num_pages,
+            "kv_page_fraction": self.page_fraction,
+            "kv_page_size": self.page_size,
+        }
+
+
+class ChunkedPrefill:
+    """Incremental chunked-prefill admission driver over a ``PagedKVPool``.
+
+    One instance per backend batch.  ``begin(slot, prompt, reserve_tokens)``
+    registers a joining request (reserving its full KV budget so decode can
+    never hit pool exhaustion); each ``step()`` advances EVERY pending
+    admission by one fixed-size chunk through a single shared jitted call to
+    ``model.prefill_chunk_paged`` and returns the last-token logits of the
+    requests whose prompt completed.  The batching scheduler interleaves
+    ``step()`` with decode steps so long prompts never stall in-flight
+    decodes; ``run(slot, prompt, ...)`` is the blocking convenience loop used
+    by the protocol-level ``join``.
+    """
+
+    def __init__(self, model, params, pool: PagedKVPool, *, chunk: int = 64,
+                 jit: bool = True):
+        """chunk: tokens fed per step per request (the jit compiles once per
+        (pending_rows, chunk) shape)."""
+        self.model = model
+        self.params = params
+        self.pool = pool
+        self.chunk = int(chunk)
+        # donate the page buffers: the pool is rebound to the outputs right
+        # after the call, so XLA may update pages in place instead of
+        # holding input+output pools alive (2x KV footprint)
+        self._fn = (jax.jit(model.prefill_chunk_paged, donate_argnums=(1, 2))
+                    if jit else model.prefill_chunk_paged)
+        self._pending: Dict[int, Tuple[np.ndarray, int]] = {}  # slot->(p,fed)
+        self._unclaimed: Dict[int, np.ndarray] = {}  # finished during run()
+
+    def begin(self, slot: int, prompt, reserve_tokens: Optional[int] = None):
+        """Register `prompt` for admission into `slot`, reserving
+        `reserve_tokens` total KV entries (default: the prompt alone)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        assert len(prompt) > 0, "empty prompt"
+        assert slot not in self._pending, f"slot {slot} already admitting"
+        self.pool.reserve(slot, int(reserve_tokens or len(prompt)))
+        self._pending[slot] = (prompt, 0)
+
+    @property
+    def pending_slots(self) -> List[int]:
+        """Slots with an admission in progress (sorted)."""
+        return sorted(self._pending)
+
+    def step(self) -> Dict[int, np.ndarray]:
+        """Feed one chunk for every pending admission in ONE jitted call.
+        Returns {slot: last-token logits (V,)} for prompts that completed
+        (callers then flip the slot active and set its position)."""
+        finished: Dict[int, np.ndarray] = dict(self._unclaimed)
+        self._unclaimed = {}
+        if not self._pending:
+            return finished
+        slots = self.pending_slots
+        c = self.chunk
+        toks = np.zeros((len(slots), c), np.int32)
+        starts = np.zeros((len(slots),), np.int32)
+        ns = np.zeros((len(slots),), np.int32)
+        for i, s in enumerate(slots):
+            prompt, fed = self._pending[s]
+            n = min(c, len(prompt) - fed)
+            toks[i, :n] = prompt[fed : fed + n]
+            starts[i], ns[i] = fed, n
+            self.pool.ensure(s, fed + n)
+        table_rows = jnp.asarray(self.pool.table[slots])
+        lg, ks, vs = self._fn(self.params, self.pool.k, self.pool.v,
+                              table_rows, jnp.asarray(toks),
+                              jnp.asarray(starts), jnp.asarray(ns))
+        self.pool.k, self.pool.v = list(ks), list(vs)
+        lg = np.asarray(lg, np.float32)
+        for i, s in enumerate(slots):
+            prompt, fed = self._pending[s]
+            fed += int(ns[i])
+            if fed >= len(prompt):
+                del self._pending[s]
+                finished[s] = lg[i]
+            else:
+                self._pending[s] = (prompt, fed)
+        return finished
+
+    def run(self, slot: int, prompt,
+            reserve_tokens: Optional[int] = None) -> np.ndarray:
+        """Blocking admission: begin + step until `slot` finishes.  Other
+        pending admissions advance alongside (shared chunks)."""
+        self.begin(slot, prompt, reserve_tokens)
+        while True:
+            done = self.step()
+            if slot in done:
+                # logits of OTHER admissions that completed during this loop
+                # stay claimable by the next step() call
+                self._unclaimed.update(
+                    {s: l for s, l in done.items() if s != slot})
+                return done[slot]
+            self._unclaimed.update(done)

@@ -308,6 +308,97 @@ def attn_decode(p, x, kv_cache, positions, cfg: ModelConfig, kind: str,
     return out.reshape(b, 1, hq * hd) @ p["wo"], {"k": ck, "v": cv}
 
 
+def _paged_qkv(p, x, cfg: ModelConfig, positions):
+    """Shared q/k/v projection + qk-norm + RoPE for the paged attention
+    paths.  x: (B, S, D); positions: (B, S) absolute token positions."""
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_head_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_head_norm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _paged_gather(pages, table):
+    """Gather a slot-contiguous logical KV view from the shared page pool.
+    pages: (P, psz, Hkv, hd); table: (B, maxp) physical page ids.  Returns
+    (B, maxp*psz, Hkv, hd) — logical token t of slot b lives at row
+    table[b, t // psz], offset t % psz, so the reshape restores token
+    order.  Junk rows (stale/unallocated pages) are masked by position in
+    the caller's attention mask, never read."""
+    b, maxp = table.shape
+    _, psz, hkv, hd = pages.shape
+    return pages[table].reshape(b, maxp * psz, hkv, hd)
+
+
+def paged_attn_decode(p, x, k_pages, v_pages, table, positions, active,
+                      cfg: ModelConfig):
+    """One-token decode against a paged KV pool (full "attn" layers only).
+
+    x: (B, 1, D); k_pages/v_pages: (P, psz, Hkv, hd) SHARED across slots;
+    table: (B, maxp) page table; positions: (B,) write index; active: (B,)
+    bool — inactive slots' writes are DROPPED (their table rows may point at
+    pages now owned by another slot, so a junk write would corrupt a
+    neighbour).  Returns (out (B,1,Hq*hd @ wo), new_k_pages, new_v_pages)."""
+    b = x.shape[0]
+    hq, hd = cfg.num_heads, cfg.resolved_head_dim
+    q, k, v = _paged_qkv(p, x, cfg, positions[:, None])
+    psz = k_pages.shape[1]
+    page = jnp.take_along_axis(table, (positions // psz)[:, None], axis=1)[:, 0]
+    page = jnp.where(active, page, k_pages.shape[0])      # OOB -> dropped
+    off = positions % psz
+    k_pages = k_pages.at[page, off].set(k[:, 0].astype(k_pages.dtype),
+                                        mode="drop")
+    v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype),
+                                        mode="drop")
+    kg = _paged_gather(k_pages, table)
+    vg = _paged_gather(v_pages, table)
+    idx = jnp.arange(kg.shape[1], dtype=jnp.int32)[None, :]
+    mask = (idx <= positions[:, None])[:, None, :]        # (B, 1, Smax)
+    out = mha(q, kg, vg, mask, cfg.attn_logit_softcap, 1.0 / np.sqrt(hd))
+    return out.reshape(b, 1, hq * hd) @ p["wo"], k_pages, v_pages
+
+
+def paged_attn_prefill_chunk(p, x, k_pages, v_pages, table, start, n,
+                             cfg: ModelConfig):
+    """One prefill chunk against a paged KV pool: write the chunk's K/V into
+    the slot's pages, then attend causally over everything written so far
+    (earlier chunks + this one).
+
+    x: (B, C, D) chunk activations (rows may belong to different requests
+    being admitted together); start: (B,) absolute position of each row's
+    first token; n: (B,) valid tokens in the row (n < C pads the final
+    chunk — pad positions write nothing and their outputs are garbage the
+    caller masks out).  Returns (out (B,C,D'), new_k_pages, new_v_pages)."""
+    b, c, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    q, k, v = _paged_qkv(p, x, cfg, positions)
+    psz = k_pages.shape[1]
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n[:, None]   # (B, C)
+    page = jnp.take_along_axis(table, positions // psz, axis=1)
+    page = jnp.where(valid, page, k_pages.shape[0])       # pads dropped
+    off = positions % psz
+    k_pages = k_pages.at[page.reshape(-1), off.reshape(-1)].set(
+        k.reshape(b * c, hkv, hd).astype(k_pages.dtype), mode="drop")
+    v_pages = v_pages.at[page.reshape(-1), off.reshape(-1)].set(
+        v.reshape(b * c, hkv, hd).astype(v_pages.dtype), mode="drop")
+    kg = _paged_gather(k_pages, table)
+    vg = _paged_gather(v_pages, table)
+    idx = jnp.arange(kg.shape[1], dtype=jnp.int32)[None, None, :]
+    # causal: for valid q rows every key <= q_pos was written (earlier
+    # chunks or this one); pad rows attend to junk but are masked downstream
+    mask = idx <= positions[:, :, None]                   # (B, C, Smax)
+    out = mha(q, kg, vg, mask, cfg.attn_logit_softcap, 1.0 / np.sqrt(hd))
+    return out.reshape(b, c, hq * hd) @ p["wo"], k_pages, v_pages
+
+
 def cross_attn_forward(p, x, enc_kv, cfg: ModelConfig):
     """Cross attention into precomputed encoder K/V (whisper decoder)."""
     b, s, d = x.shape

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import kv_pages as kvp
 from repro.models import layers, moe as moe_lib, shard_utils, ssm as ssm_lib
 
 
@@ -128,6 +129,60 @@ def _layer_decode(p, x, cache, positions, cfg: ModelConfig, kind: str,
             y = layers.apply_norm(p["post_ffn_norm"], y, cfg)
         x = x + y
     return x, new_cache
+
+
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """True iff the paged KV layout serves this architecture: every layer a
+    full-window "attn" layer (no ring caches), no MLA latent cache, no
+    cross-attention encoder — the HOBBIT engine's model class (Mixtral /
+    Phi-MoE shapes).  Other families keep the dense per-batch cache."""
+    return (cfg.mla is None and cfg.encoder is None
+            and all(k == "attn" for k in cfg.layer_kinds()))
+
+
+def _layer_decode_paged(p, x, kp, vp, table, positions, active, cfg, is_moe):
+    """One-token layer step against paged KV.  Mirrors `_layer_decode` for
+    the paged model class (attn + optional MoE/FFN); `active` doubles as the
+    MoE token mask so released slots take no dispatch capacity."""
+    h = layers.apply_norm(p["pre_norm"], x, cfg)
+    out, kp, vp = layers.paged_attn_decode(p["attn"], h, kp, vp, table,
+                                           positions, active, cfg)
+    if cfg.sandwich_norm:
+        out = layers.apply_norm(p["post_norm"], out, cfg)
+    x = x + out
+    if "ffn" in p:
+        h = layers.apply_norm(p["ffn_norm"], x, cfg)
+        if is_moe:
+            y, _, _ = moe_lib.moe_forward(p["ffn"], h, cfg, token_mask=active)
+        else:
+            y = layers.ffn_forward(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            y = layers.apply_norm(p["post_ffn_norm"], y, cfg)
+        x = x + y
+    return x, kp, vp
+
+
+def _layer_chunk_paged(p, x, kp, vp, table, start, n, valid_flat, cfg, is_moe):
+    """One prefill-chunk layer step against paged KV (mirror of
+    `_layer_forward` for the paged model class).  valid_flat: (B*C,) live-
+    token mask — pad tokens of the final chunk occupy no MoE capacity."""
+    h = layers.apply_norm(p["pre_norm"], x, cfg)
+    out, kp, vp = layers.paged_attn_prefill_chunk(p["attn"], h, kp, vp,
+                                                  table, start, n, cfg)
+    if cfg.sandwich_norm:
+        out = layers.apply_norm(p["post_norm"], out, cfg)
+    x = x + out
+    if "ffn" in p:
+        h = layers.apply_norm(p["ffn_norm"], x, cfg)
+        if is_moe:
+            y, _, _ = moe_lib.moe_forward(p["ffn"], h, cfg,
+                                          token_mask=valid_flat)
+        else:
+            y = layers.ffn_forward(p["ffn"], h, cfg)
+        if cfg.sandwich_norm:
+            y = layers.apply_norm(p["post_ffn_norm"], y, cfg)
+        x = x + y
+    return x, kp, vp
 
 
 # --------------------------------------------------------------------------
@@ -388,9 +443,32 @@ class Model:
         return nll + aux, {"nll": nll, "aux": aux, "tokens": cnt}
 
     # -------------------- decode --------------------
-    def init_cache(self, batch: int, max_len: int):
-        """Zeroed decode cache for every layer (+enc_kv slot for whisper)."""
+    def init_cache(self, batch: int, max_len: int, *, paged: bool = False,
+                   page_size: int = 64, num_pages: Optional[int] = None):
+        """Decode cache for every layer.
+
+        paged=False (default): zeroed dense per-slot buffers — every slot
+        pays for `max_len` up front (+enc_kv slot for whisper).
+
+        paged=True: a started `kv_pages.PagedKVPool` instead — slots draw
+        `page_size`-token pages from a shared pool of `num_pages` (default:
+        the dense equivalent, batch * ceil(max_len / page_size)) as they
+        grow; drive it with `decode_step_paged` / `prefill_chunk_paged`.
+        Only the all-"attn" model class supports it (`supports_paged_kv`)."""
         cfg = self.cfg
+        if paged:
+            if not supports_paged_kv(cfg):
+                raise ValueError(
+                    f"paged KV unsupported for arch {cfg.name}: needs "
+                    "all-'attn' layers, no MLA, no encoder")
+            maxp = kvp.pages_for(max_len, page_size)
+            return_pool = kvp.PagedKVPool(
+                num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim, dtype=layers._dt(cfg),
+                num_pages=num_pages or batch * maxp, page_size=page_size,
+                max_pages_per_slot=maxp)
+            return_pool.start(batch)
+            return return_pool
         hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         dt = layers._dt(cfg)
 
@@ -503,6 +581,68 @@ class Model:
             new_cache["enc_kv"] = cache["enc_kv"]
         lg = self.logits(params, x)[:, 0, :]
         return lg, new_cache
+
+    # -------------------- paged decode / chunked prefill --------------------
+    def decode_step_paged(self, params, k_pages, v_pages, table, tokens,
+                          positions, active):
+        """One decode step against a paged KV pool (`supports_paged_kv`
+        model class; flat per-layer loop — the paged layout replaces the
+        scanned-block cache carry with shared page buffers).
+
+        k_pages/v_pages: per-layer lists of (P, psz, Hkv, hd) pool buffers;
+        table: (B, maxp) page table; tokens: (B, 1); positions: (B,) write
+        index; active: (B,) bool (inactive slots write nothing and take no
+        MoE capacity).  Returns (logits (B, V), new_k_pages, new_v_pages)."""
+        cfg = self.cfg
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        if cfg.rope_theta <= 0:
+            pos_table = layers.sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+            x = x + pos_table[positions][:, None, :].astype(x.dtype)
+        moes = self.cfg.layer_is_moe()
+        k_pages, v_pages = list(k_pages), list(v_pages)
+        for li, p in enumerate(unstack_layers(cfg, params)):
+            x, k_pages[li], v_pages[li] = _layer_decode_paged(
+                p, x, k_pages[li], v_pages[li], table, positions, active,
+                cfg, moes[li])
+        lg = self.logits(params, x)[:, 0, :]
+        return lg, k_pages, v_pages
+
+    def prefill_chunk_paged(self, params, k_pages, v_pages, table, tokens,
+                            start, n):
+        """One chunk of chunked prefill against a paged KV pool: run `tokens`
+        (B, C) — row b valid for its first n[b] tokens, starting at absolute
+        position start[b] — through every layer, writing K/V into the rows'
+        pages and attending over everything written so far.
+
+        Returns (last-valid-token logits (B, V), new_k_pages, new_v_pages).
+        Rows may belong to different requests: admission batches up to k
+        joining prompts through one call (serving.batching).  Numerics match
+        one-shot prefill exactly for attention; MoE capacity is computed per
+        chunk, so token *drops* can differ at tight capacity_factor (ample
+        capacity — the serving configs here — makes them identical)."""
+        cfg = self.cfg
+        b, c = tokens.shape
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.scale_embedding:
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+        if cfg.rope_theta <= 0:
+            pos_table = layers.sinusoidal_positions(cfg.max_seq_len, cfg.d_model)
+            x = x + pos_table[positions].astype(x.dtype)
+        valid_flat = (jnp.arange(c, dtype=jnp.int32)[None, :]
+                      < n[:, None]).reshape(-1)
+        moes = self.cfg.layer_is_moe()
+        k_pages, v_pages = list(k_pages), list(v_pages)
+        for li, p in enumerate(unstack_layers(cfg, params)):
+            x, k_pages[li], v_pages[li] = _layer_chunk_paged(
+                p, x, k_pages[li], v_pages[li], table, start, n, valid_flat,
+                cfg, moes[li])
+        last = jnp.clip(n - 1, 0, c - 1)
+        xl = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B,1,D)
+        lg = self.logits(params, xl)[:, 0, :]
+        return lg, k_pages, v_pages
 
     # -------------------- prefill --------------------
     def prefill(self, params, batch: Batch, max_len: int):

@@ -13,9 +13,24 @@ a finished request `release()`s its slot mid-flight, and a queued request
     start_batch(batch, max_len)      allocate B slots (all marked active)
     prefill(prompts (B,S)) -> (B,V)  full-batch prefill, last-token logits
     join(slot, prompt (S,)) -> (V,)  admit one request into a slot mid-flight
-    release(slot)                    free a slot (junk rows until next join)
+    join_begin(slot, prompt, ...)    start an *incremental* admission
+    join_step() -> {slot: (V,)}      advance all admissions by one chunk
+    can_admit(tokens) -> bool        does KV capacity exist for a request?
+    release(slot)                    free a slot (and its KV pages)
     step(tokens (B,)) -> (B,V)       one decode step for the whole batch
     stats() -> dict                  backend-specific counters
+
+KV memory comes in two layouts, selected per backend at construction:
+
+  * dense (default): ``start_batch`` allocates a (B, max_len) cache up
+    front — simple, but one long request inflates every slot.
+  * paged (``paged=True`` / ``EngineConfig(paged_kv=True)``): a fixed
+    device-resident page pool (`repro.models.kv_pages.PagedKVPool`,
+    ~64-token pages) with per-slot page tables; a slot's memory grows with
+    its actual length, ``release`` returns its pages to the pool, and
+    admission reserves a request's full budget so decode never starves.
+    Prompts are prefilled in fixed-size chunks (``join_begin``/``join_step``)
+    that the scheduler interleaves with decode steps.
 
 Usage::
 
@@ -41,7 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models.model import Batch, Model
+from repro.models.kv_pages import ChunkedPrefill, PagedKVPool
+from repro.models.model import Batch, Model, supports_paged_kv
 from repro.serving.decode import (GenerateResult, make_prefill_step,
                                   sample_token)
 
@@ -52,17 +68,53 @@ class InferenceBackend(Protocol):
 
     model: Model
 
-    def start_batch(self, batch: int, max_len: int) -> None: ...
+    def start_batch(self, batch: int, max_len: int) -> None:
+        """Allocate `batch` KV slots able to reach `max_len` tokens each
+        (dense: up-front per-slot buffers; paged: a shared page pool)."""
+        ...
 
-    def prefill(self, prompts: np.ndarray) -> np.ndarray: ...
+    def prefill(self, prompts: np.ndarray) -> np.ndarray:
+        """Full-batch prefill of (B, S) prompts; returns last-token logits
+        (B, V) and marks every slot active."""
+        ...
 
-    def join(self, slot: int, prompt: np.ndarray) -> np.ndarray: ...
+    def join(self, slot: int, prompt: np.ndarray) -> np.ndarray:
+        """Admit one request into a free slot mid-flight (blocking: runs the
+        whole prompt).  Returns last-token logits (V,)."""
+        ...
 
-    def release(self, slot: int) -> None: ...
+    def join_begin(self, slot: int, prompt: np.ndarray,
+                   reserve_tokens: Optional[int] = None) -> None:
+        """Start an incremental admission into `slot`, reserving
+        `reserve_tokens` of KV capacity (prompt + decode budget) so the
+        request can never hit pool exhaustion mid-decode."""
+        ...
 
-    def step(self, tokens: np.ndarray) -> np.ndarray: ...
+    def join_step(self) -> dict:
+        """Advance every in-progress admission by one prefill chunk (one
+        shared jitted call where the backend supports it).  Returns
+        {slot: last-token logits (V,)} for admissions that completed."""
+        ...
 
-    def stats(self) -> dict: ...
+    def can_admit(self, tokens: int) -> bool:
+        """True iff KV capacity for a request of `tokens` total length is
+        available right now (dense backends: always)."""
+        ...
+
+    def release(self, slot: int) -> None:
+        """Free a slot: its rows become junk until the next join, and any
+        KV pages it held return to the pool."""
+        ...
+
+    def step(self, tokens: np.ndarray) -> np.ndarray:
+        """One decode step for the whole batch ((B,) tokens -> (B, V)
+        logits); inactive slots ride along but are not advanced."""
+        ...
+
+    def stats(self) -> dict:
+        """JSON-serializable backend counters (uniform keys: load_stall_s,
+        overlap_fraction, kv_pages_used, kv_page_fraction, ...)."""
+        ...
 
 
 # --------------------------------------------------------------------------
@@ -98,12 +150,26 @@ def _scatter_slot(dst_cache, src_cache, slot: int):
 
 
 class DenseBackend:
-    """All weights resident on device; jitted prefill + decode step."""
+    """All weights resident on device; jitted prefill + decode step.
 
-    def __init__(self, model: Model, params, *, jit: bool = True):
+    ``paged=True`` swaps the per-slot (B, max_len) cache for a shared
+    `PagedKVPool` (page_size-token pages, pool of `kv_pages` pages —
+    default the dense equivalent) and prefills prompts in
+    `prefill_chunk`-token chunks; requires `supports_paged_kv(model.cfg)`."""
+
+    def __init__(self, model: Model, params, *, jit: bool = True,
+                 paged: bool = False, page_size: int = 64,
+                 kv_pages: Optional[int] = None, prefill_chunk: int = 64):
         self.model = model
         self.params = params
         self._jit = jit
+        self.paged = paged
+        self.page_size = page_size
+        self.kv_pages = kv_pages
+        self.prefill_chunk = prefill_chunk
+        if paged and not supports_paged_kv(model.cfg):
+            raise ValueError(f"arch {model.cfg.name} does not support "
+                             "the paged KV layout")
 
         def step(params, cache, tokens, positions, active):
             # active mask: released slots must not consume MoE dispatch
@@ -112,7 +178,15 @@ class DenseBackend:
                                      active=active)
 
         self._step = jax.jit(step, donate_argnums=1) if jit else step
+        # donate the page buffers (args 1, 2 after params): the pool is
+        # rebound to the outputs immediately, mirroring the dense cache
+        self._paged_step = (jax.jit(model.decode_step_paged,
+                                    donate_argnums=(1, 2)) if jit
+                            else model.decode_step_paged)
         self._prefill_fns = {}          # max_len -> (jitted) prefill
+        self.kv: Optional[PagedKVPool] = None
+        self._admission: Optional[ChunkedPrefill] = None
+        self._pending_joins: dict = {}  # non-paged incremental admissions
         self.batch = 0
         self.max_len = 0
 
@@ -123,13 +197,43 @@ class DenseBackend:
         return self._prefill_fns[max_len]
 
     def start_batch(self, batch: int, max_len: int) -> None:
+        """Allocate serving state: dense (B, max_len) cache, or — paged —
+        (re)start the page pool (buffers are rebuilt only when shape-relevant
+        parameters changed)."""
         self.batch, self.max_len = batch, max_len
-        self.cache = self.model.init_cache(batch, max_len)
         self.positions = jnp.zeros((batch,), jnp.int32)
         self.active = np.ones((batch,), bool)
+        self._pending_joins = {}
+        if not self.paged:
+            self.cache = self.model.init_cache(batch, max_len)
+            return
+        self.kv = self.model.init_cache(batch, max_len, paged=True,
+                                        page_size=self.page_size,
+                                        num_pages=self.kv_pages)
+        self._admission = ChunkedPrefill(self.model, self.params, self.kv,
+                                         chunk=self.prefill_chunk,
+                                         jit=self._jit)
 
     def prefill(self, prompts) -> np.ndarray:
-        prompts = jnp.asarray(np.asarray(prompts, np.int32))
+        """Full-batch prefill.  Paged: chunked prefill with every row
+        reserving the full max_len (dense budget semantics).  Returns
+        last-token logits (B, V)."""
+        prompts_np = np.asarray(prompts, np.int32)
+        if self.paged:
+            # chunked prefill over the whole batch: every row reserves the
+            # full max_len (same budget semantics as the dense allocator)
+            for r in range(prompts_np.shape[0]):
+                self._admission.begin(r, prompts_np[r],
+                                      reserve_tokens=self.max_len)
+            done: dict = {}
+            while len(done) < prompts_np.shape[0]:
+                done.update(self._admission.step())
+            out = np.stack([done[r] for r in range(prompts_np.shape[0])])
+            self.positions = jnp.asarray(
+                [prompts_np.shape[1]] * prompts_np.shape[0], jnp.int32)
+            self.active[:] = True
+            return out
+        prompts = jnp.asarray(prompts_np)
         batch = Batch(tokens=prompts, loss_mask=jnp.ones(prompts.shape))
         logits, self.cache, self.positions = self._prefill(self.max_len)(
             self.params, batch)
@@ -137,6 +241,50 @@ class DenseBackend:
         return np.asarray(logits, np.float32)
 
     def join(self, slot: int, prompt) -> np.ndarray:
+        """Blocking admission (protocol compatibility).  Paged slots reserve
+        the full max_len and run their chunks to completion (concurrently
+        pending join_begin admissions advance alongside; their finished
+        logits stay claimable by the next join_step).  Dense slots prefill
+        one-shot without touching other pending admissions."""
+        if self.paged:
+            lg = self._admission.run(slot, np.asarray(prompt, np.int32),
+                                     reserve_tokens=self.max_len)
+            self.positions = self.positions.at[slot].set(
+                int(self.kv.lens[slot]))
+            self.active[slot] = True
+            return lg
+        return self._join_dense(slot, np.asarray(prompt, np.int32))
+
+    def join_begin(self, slot: int, prompt,
+                   reserve_tokens: Optional[int] = None) -> None:
+        """Start an incremental admission.  Paged: reserves KV pages for
+        `reserve_tokens` (default max_len) and queues the prompt for chunked
+        prefill.  Dense: stashes the prompt; join_step runs it one-shot."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if self.paged:
+            self._admission.begin(slot, prompt,
+                                  reserve_tokens=reserve_tokens or self.max_len)
+        else:
+            self._pending_joins[slot] = prompt
+
+    def join_step(self) -> dict:
+        """Advance admissions one chunk (paged: ONE shared jitted call over
+        every pending prompt; dense: each pending prompt's one-shot prefill).
+        Completed slots are activated; returns their logits."""
+        done: dict = {}
+        if self.paged:
+            done = self._admission.step()
+            for slot, _ in done.items():
+                plen = int(self.kv.lens[slot])
+                self.positions = self.positions.at[slot].set(plen)
+                self.active[slot] = True
+            return done
+        for slot, prompt in list(self._pending_joins.items()):
+            del self._pending_joins[slot]
+            done[slot] = self._join_dense(slot, prompt)
+        return done
+
+    def _join_dense(self, slot: int, prompt) -> np.ndarray:
         prompt = jnp.asarray(np.asarray(prompt, np.int32).reshape(1, -1))
         batch = Batch(tokens=prompt, loss_mask=jnp.ones(prompt.shape))
         logits, one_cache, positions = self._prefill(self.max_len)(
@@ -146,26 +294,54 @@ class DenseBackend:
         self.active[slot] = True
         return np.asarray(logits[0], np.float32)
 
+    def can_admit(self, tokens: int) -> bool:
+        """Paged: does the pool have unreserved pages for `tokens`?  Dense:
+        always (the (B, max_len) slot is pre-allocated)."""
+        if self.paged:
+            return self.kv.can_reserve(tokens)
+        return True
+
     def release(self, slot: int) -> None:
+        """Free a slot; paged slots return their pages to the pool for the
+        next queued request."""
         self.active[slot] = False
+        if self.paged and self.kv is not None:
+            self.kv.release(slot)
 
     def step(self, tokens) -> np.ndarray:
+        """One decode step for the whole batch; under paged KV the step
+        first grows each active slot's page chain for the token about to be
+        written, then scatters/gathers through the page table."""
         tokens = jnp.asarray(np.asarray(tokens, np.int32).reshape(-1, 1))
-        logits, self.cache = self._step(self.params, self.cache, tokens,
-                                        self.positions,
-                                        jnp.asarray(self.active))
+        if self.paged:
+            pos_host = np.asarray(self.positions)
+            for r in range(self.batch):
+                if self.active[r]:
+                    self.kv.ensure(r, int(pos_host[r]) + 1)
+            logits, ks, vs = self._paged_step(
+                self.params, self.kv.k, self.kv.v, self.kv.table_device(),
+                tokens, self.positions, jnp.asarray(self.active))
+            self.kv.k, self.kv.v = list(ks), list(vs)
+        else:
+            logits, self.cache = self._step(self.params, self.cache, tokens,
+                                            self.positions,
+                                            jnp.asarray(self.active))
         # only active slots advance; freed slots idle at their last position
         self.positions = self.positions + jnp.asarray(
             self.active.astype(np.int32))
         return np.asarray(logits, np.float32)
 
     def stats(self) -> dict:
-        # load_stall_s / overlap_fraction are part of the uniform backend
-        # stats contract (schedulers attribute stall to requests); resident
-        # weights never stall on expert transfers
-        return {"backend": "dense", "batch": self.batch,
-                "max_len": self.max_len,
-                "load_stall_s": 0.0, "overlap_fraction": 0.0}
+        """Uniform backend counters; resident weights never stall on expert
+        transfers, so load_stall_s/overlap_fraction are 0.  kv_* keys report
+        page-pool pressure (zeros under the dense allocator)."""
+        s = {"backend": "dense", "batch": self.batch, "max_len": self.max_len,
+             "load_stall_s": 0.0, "overlap_fraction": 0.0,
+             "kv_pages_used": 0, "kv_pages_total": 0,
+             "kv_page_fraction": 0.0}
+        if self.paged and self.kv is not None:
+            s.update(self.kv.stats())
+        return s
 
 
 # --------------------------------------------------------------------------
@@ -175,41 +351,79 @@ class DenseBackend:
 class HobbitBackend:
     """`OffloadEngine` behind the protocol: batched mixed-precision decode
     with union-of-slots expert loading and a real (dense, compute-bound)
-    prefill path."""
+    prefill path.  `EngineConfig(paged_kv=True)` selects the paged KV
+    layout; the engine then shares the same `PagedKVPool` / `ChunkedPrefill`
+    machinery as `DenseBackend`."""
 
     def __init__(self, engine):
         self.engine = engine
         self.model = engine.model
 
     def start_batch(self, batch: int, max_len: int) -> None:
+        """Allocate engine serving state (dense per-layer caches or the
+        page pool) for `batch` slots."""
         self.engine.start_batch(batch, max_len)
 
     def prefill(self, prompts) -> np.ndarray:
+        """Full-batch dense-compute prefill (prefill touches every expert
+        anyway; the offload cache only serves decode)."""
         return self.engine.prefill_batch(prompts)
 
     def join(self, slot: int, prompt) -> np.ndarray:
+        """Blocking mid-flight admission of one request into `slot`."""
         return self.engine.join(slot, prompt)
 
+    def join_begin(self, slot: int, prompt,
+                   reserve_tokens: Optional[int] = None) -> None:
+        """Start an incremental admission (chunked under paged KV)."""
+        self.engine.join_begin(slot, prompt, reserve_tokens=reserve_tokens)
+
+    def join_step(self) -> dict:
+        """Advance every in-progress admission by one prefill chunk."""
+        return self.engine.join_step()
+
+    def can_admit(self, tokens: int) -> bool:
+        """KV-capacity gate for admission (always True under dense KV)."""
+        return self.engine.can_admit(tokens)
+
     def release(self, slot: int) -> None:
+        """Free a slot (and its KV pages under paged KV)."""
         self.engine.release(slot)
 
     def step(self, tokens) -> np.ndarray:
+        """One batched HOBBIT decode step ((B,) tokens -> (B, V) logits)."""
         return self.engine.decode_step_batch(tokens)
 
     def stats(self) -> dict:
+        """Engine counters (cache/loader/predictor/scheduler/KV-pool) tagged
+        with the backend name."""
         s = dict(self.engine.stats())
         s["backend"] = "hobbit"
         return s
 
 
 def make_backend(kind: str, model: Model, params, *, engine_config=None,
-                 jit: bool = True):
-    """Factory for launchers: kind in {"dense", "hobbit"}."""
+                 jit: bool = True, paged: bool = False, page_size: int = 64,
+                 kv_pages: Optional[int] = None, prefill_chunk: int = 64):
+    """Factory for launchers: kind in {"dense", "hobbit"}.  `paged` (with
+    `page_size` / `kv_pages` / `prefill_chunk`) selects the paged KV layout
+    on either backend; for hobbit it overrides the corresponding
+    EngineConfig fields."""
     if kind == "dense":
-        return DenseBackend(model, params, jit=jit)
+        return DenseBackend(model, params, jit=jit, paged=paged,
+                            page_size=page_size, kv_pages=kv_pages,
+                            prefill_chunk=prefill_chunk)
     if kind == "hobbit":
+        import dataclasses
+
         from repro.core.engine import EngineConfig, OffloadEngine
-        eng = OffloadEngine(model, params, engine_config or EngineConfig())
+        ecfg = engine_config or EngineConfig()
+        if paged:
+            ecfg = dataclasses.replace(ecfg, paged_kv=True,
+                                       kv_page_size=page_size,
+                                       kv_pages=kv_pages,
+                                       prefill_chunk=prefill_chunk)
+        eng = OffloadEngine(model, params, ecfg)
         return HobbitBackend(eng)
     raise ValueError(f"unknown backend kind: {kind!r}")
 

@@ -1,15 +1,27 @@
 """Continuous batching for the serving path, backend-agnostic.
 
 The scheduler owns `max_batch` slots on an `InferenceBackend` (dense or
-HOBBIT-offload — identical code path).  Requests queue FIFO; a request is
-admitted into any free slot via `backend.join` (its own prefill), decodes
-together with whatever else is in flight, and on completion `release`s the
-slot so the next queued request joins at the very next step — no bucketing
-by prompt length and no waiting for batch-mates to finish.
+HOBBIT-offload — identical code path).  Requests queue FIFO; admission is
+*chunked and batched*: up to `admit_k` queued requests are in admission
+concurrently, and one `backend.join_step()` call per scheduler iteration
+advances ALL of them by one prefill chunk (one shared jitted call on paged
+backends) before the next decode step runs — so a long prompt prefills in
+fixed-size chunks interleaved with decode steps and never stalls in-flight
+decodes.  On completion a request `release`s its slot (returning its KV
+pages to the pool on paged backends) and the next queued request joins at
+the very next step — no bucketing by prompt length and no waiting for
+batch-mates to finish.
+
+Admission is KV-aware: a request is only admitted when
+`backend.can_admit(prompt + max_new_tokens + 1)` says the pool can hold its
+*whole* lifetime (the backend reserves that budget at `join_begin`), so a
+paged pool can never starve an in-flight decode; when the pool is full the
+request simply waits in the queue for a retirement to free pages — that
+wait is reported as `admission_wait_s`.
 
 Per-request latency is split into queue wait / prefill / decode so the
 reported `decode_tok_s` measures decode steps only (queue wait and prefill
-are reported separately).
+are reported separately).  See docs/METRICS.md for every stats() field.
 """
 
 from __future__ import annotations
@@ -29,14 +41,16 @@ from repro.serving.decode import sample_token
 
 @dataclasses.dataclass
 class Request:
+    """One generation request and, after completion, its latency breakdown."""
     rid: int
     prompt: np.ndarray              # (S,)
     max_new_tokens: int
     submitted_at: float = 0.0
     # filled on completion:
     output: Optional[np.ndarray] = None
-    queue_wait_s: float = 0.0       # submit -> admission into a slot
-    prefill_latency_s: float = 0.0  # this request's own prefill (join) time
+    queue_wait_s: float = 0.0       # submit -> admission started (slot+KV)
+    admission_wait_s: float = 0.0   # submit -> prefill complete (first token)
+    prefill_latency_s: float = 0.0  # this request's own (chunked) prefill
     decode_s: float = 0.0           # wall time of decode steps it rode in
     load_stall_s: float = 0.0       # share of expert-load stall in its steps
     total_latency_s: float = 0.0
@@ -45,11 +59,14 @@ class Request:
 class BatchingServer:
     """Slot-based continuous batching over any `InferenceBackend`.
 
-    Accepts either a backend, or `(model, params)` for the common dense case
-    (kept for backwards compatibility with the original server)."""
+    `admit_k` bounds how many requests prefill concurrently (they share one
+    jitted chunk call per iteration on paged backends).  Accepts either a
+    backend, or `(model, params)` for the common dense case (kept for
+    backwards compatibility with the original server)."""
 
     def __init__(self, backend_or_model, params=None, *, max_batch: int = 8,
-                 max_len: int = 512, temperature: float = 0.0, seed: int = 0):
+                 max_len: int = 512, temperature: float = 0.0, seed: int = 0,
+                 admit_k: int = 4):
         if isinstance(backend_or_model, Model):
             backend: InferenceBackend = DenseBackend(backend_or_model, params)
         else:
@@ -58,16 +75,21 @@ class BatchingServer:
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = temperature
+        self.admit_k = admit_k
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         # scheduler event log: (event, slot, rid, step_index) — lets tests
-        # and operators confirm mid-flight admissions/retirements
+        # and operators confirm mid-flight admissions/retirements ("admit" =
+        # chunked prefill started, "join" = prefill complete, slot decoding)
         self.events: List[Tuple[str, int, int, int]] = []
         self._step_time_s = 0.0
         self._step_tokens = 0
+        self._occupancy_sum = 0         # Σ per-step live slots (decode+admit)
+        self._steps = 0
 
     def submit(self, req: Request):
+        """Queue a request (FIFO)."""
         req.submitted_at = time.time()
         self.queue.append(req)
 
@@ -78,7 +100,7 @@ class BatchingServer:
                                        self.temperature))
 
     def run(self):
-        """Serve until queue and in-flight slots are drained."""
+        """Serve until queue, admissions and in-flight slots are drained."""
         if not self.queue:
             return
         self.backend.start_batch(self.max_batch, self.max_len)
@@ -86,6 +108,8 @@ class BatchingServer:
         for slot in free:           # slots are inactive until a request joins
             self.backend.release(slot)
         active: Dict[int, Request] = {}
+        admitting: Dict[int, Request] = {}
+        admit_t0: Dict[int, float] = {}
         outs: Dict[int, List[int]] = {}
         pending_tok: Dict[int, int] = {}
         step_idx = 0
@@ -101,25 +125,46 @@ class BatchingServer:
             self.events.append(("retire", slot, req.rid, step_idx))
             free.append(slot)
 
-        while self.queue or active:
+        while self.queue or active or admitting:
             # finished requests free their slots before the next step
             for slot in [s for s, r in active.items()
                          if len(outs[s]) >= r.max_new_tokens]:
                 retire(slot)
-            # admission: queued requests take any free slot mid-flight
-            while free and self.queue:
-                slot, req = free.pop(0), self.queue.pop(0)
+            # admission: up to admit_k queued requests prefill concurrently,
+            # each gated on KV capacity for its whole lifetime
+            while free and self.queue and len(admitting) < self.admit_k:
+                req = self.queue[0]
+                need = len(req.prompt) + req.max_new_tokens + 1
+                if not self.backend.can_admit(need):
+                    if not active and not admitting:
+                        # nothing in flight can ever free capacity for it
+                        raise RuntimeError(
+                            f"request rid={req.rid} needs {need} KV tokens "
+                            "but the drained pool cannot hold it; grow "
+                            "kv_pages / max_len or shrink the request")
+                    break               # wait for a retirement to free pages
+                self.queue.pop(0)
+                slot = free.pop(0)
                 t0 = time.time()
-                logits = self.backend.join(
-                    slot, np.asarray(req.prompt, np.int32))
-                t1 = time.time()
                 req.queue_wait_s = t0 - req.submitted_at
-                req.prefill_latency_s = t1 - t0
-                tok = int(self._sample(logits[None])[0])
-                active[slot] = req
-                outs[slot] = [tok][: req.max_new_tokens]
-                pending_tok[slot] = tok
-                self.events.append(("join", slot, req.rid, step_idx))
+                self.backend.join_begin(slot, np.asarray(req.prompt, np.int32),
+                                        reserve_tokens=need)
+                admitting[slot] = req
+                admit_t0[slot] = t0
+                self.events.append(("admit", slot, req.rid, step_idx))
+            # one shared call advances every in-progress admission one chunk
+            if admitting:
+                done = self.backend.join_step()
+                now = time.time()
+                for slot, logits in done.items():
+                    req = admitting.pop(slot)
+                    req.prefill_latency_s = now - admit_t0.pop(slot)
+                    req.admission_wait_s = now - req.submitted_at
+                    tok = int(self._sample(logits[None])[0])
+                    active[slot] = req
+                    outs[slot] = [tok][: req.max_new_tokens]
+                    pending_tok[slot] = tok
+                    self.events.append(("join", slot, req.rid, step_idx))
             stepping = [s for s, r in active.items()
                         if len(outs[s]) < r.max_new_tokens]
             if not stepping:
@@ -143,10 +188,14 @@ class BatchingServer:
                 pending_tok[slot] = int(nxt[slot])
             self._step_time_s += dt
             self._step_tokens += len(stepping)
+            self._occupancy_sum += len(stepping) + len(admitting)
+            self._steps += 1
             step_idx += 1
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
+        """Aggregate serving metrics over completed requests (see
+        docs/METRICS.md for the full glossary)."""
         if not self.completed:
             return {}
         done = self.completed
@@ -154,6 +203,8 @@ class BatchingServer:
         return {
             "requests": len(done),
             "mean_queue_wait_s": float(np.mean([r.queue_wait_s for r in done])),
+            "admission_wait_s": float(np.mean([r.admission_wait_s
+                                               for r in done])),
             "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in done])),
             "mean_decode_s": float(np.mean([r.decode_s for r in done])),
             "mean_load_stall_s": float(np.mean([r.load_stall_s for r in done])),
@@ -161,6 +212,11 @@ class BatchingServer:
             # decode throughput over decode-step wall time only (queue wait
             # and prefill are reported separately above)
             "decode_tok_s": self._step_tokens / max(self._step_time_s, 1e-9),
+            # mean live slots per decode step (decoding + admitting): the
+            # paged-vs-dense occupancy metric of benchmarks/decode_speedup
+            "mean_occupancy": (self._occupancy_sum / self._steps
+                               if self._steps else 0.0),
             "overlap_fraction": backend_stats.get("overlap_fraction", 0.0),
+            "kv_page_fraction": backend_stats.get("kv_page_fraction", 0.0),
             "backend": backend_stats,
         }

@@ -1,0 +1,107 @@
+"""Docs CI gate (run from the repo root: ``python tools/check_docs.py``).
+
+Two checks, both hard failures:
+
+1. **Markdown links resolve** — every relative link target in README.md and
+   docs/*.md must exist on disk (anchors are stripped; http(s)/mailto links
+   are skipped).  Keeps ARCHITECTURE.md / METRICS.md from silently rotting
+   as files move.
+
+2. **Public symbols are documented** — every public module / class /
+   function / method in the serving API surface (``src/repro/serving/api.py``)
+   and the paged KV pool (``src/repro/models/kv_pages.py``) must carry a
+   docstring.  These two modules are the protocol seam new backends build
+   against, so undocumented symbols there are treated as build breaks.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MD_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+DOCSTRING_MODULES = [
+    ROOT / "src" / "repro" / "serving" / "api.py",
+    ROOT / "src" / "repro" / "models" / "kv_pages.py",
+]
+
+# [text](target) — excluding images; tolerate titles after the target
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def check_markdown_links(errors: list):
+    """Verify every relative markdown link target exists on disk."""
+    for md in MD_FILES:
+        if not md.exists():
+            errors.append(f"{md.relative_to(ROOT)}: file missing")
+            continue
+        for m in _LINK_RE.finditer(md.read_text()):
+            target = m.group(1).split("#", 1)[0]
+            if not target or target.startswith(("http://", "https://",
+                                               "mailto:")):
+                continue
+            resolved = (md.parent / target).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {m.group(1)}")
+
+
+def _missing_docstrings(tree: ast.Module, modname: str):
+    """Yield 'modname:line symbol' for public module-level defs and public
+    methods of module-level classes without docstrings (nested closures are
+    implementation detail and exempt)."""
+    if not ast.get_docstring(tree):
+        yield f"{modname}:1 <module>"
+
+    def public_defs(body, prefix=""):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.ClassDef)):
+                if node.name.startswith("_"):
+                    continue
+                yield prefix + node.name, node
+
+    for name, node in public_defs(tree.body):
+        if ast.get_docstring(node) is None:
+            yield f"{modname}:{node.lineno} {name}"
+        if isinstance(node, ast.ClassDef):
+            for mname, mnode in public_defs(node.body, prefix=name + "."):
+                if ast.get_docstring(mnode) is None:
+                    yield f"{modname}:{mnode.lineno} {mname}"
+
+
+def check_docstrings(errors: list):
+    """Every public symbol in the gated modules carries a docstring."""
+    for path in DOCSTRING_MODULES:
+        rel = str(path.relative_to(ROOT))
+        if not path.exists():
+            errors.append(f"{rel}: file missing")
+            continue
+        tree = ast.parse(path.read_text())
+        for miss in _missing_docstrings(tree, rel):
+            errors.append(f"undocumented public symbol: {miss}")
+
+
+def main() -> int:
+    """Run both checks; nonzero exit (build break) on any finding."""
+    errors: list = []
+    check_markdown_links(errors)
+    check_docstrings(errors)
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    n_links = sum(len(_LINK_RE.findall(p.read_text()))
+                  for p in MD_FILES if p.exists())
+    print(f"check_docs: OK ({len(MD_FILES)} markdown files, ~{n_links} links, "
+          f"{len(DOCSTRING_MODULES)} docstring-gated modules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
