@@ -7,15 +7,12 @@ from __future__ import annotations
 
 import random
 
-import numpy as np
-
 from benchmarks import common
 from repro.core import (EngineConfig, OffloadEngine, Thresholds,
                         cache_policy_penalty)
-from repro.core.policies import FLD, LFU, LHU, LRU, MULTIDIM, PolicyWeights
+from repro.core.policies import FLD, LFU, LHU, LRU, MULTIDIM
 from repro.core.cache import MultidimensionalCache
 from repro.core.scoring import PREC_HI, PREC_SKIP, precision_decisions
-from repro.quant.quantize import expert_nbytes
 
 
 class _RandomPolicyCache(MultidimensionalCache):

@@ -14,16 +14,14 @@ import os
 import sys
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import get_config, smoke_variant
 from repro.configs.base import ModelConfig
-from repro.data.pipeline import DataConfig, batches, eval_batches
-from repro.models import Batch, Model, build_model
+from repro.data.pipeline import DataConfig, batches
+from repro.models import build_model
 from repro.training import checkpoint as ckpt
 from repro.training.optimizer import OptimizerConfig
 from repro.training.train_loop import init_state, train

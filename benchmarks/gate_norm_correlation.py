@@ -11,9 +11,8 @@ import jax.numpy as jnp
 
 from benchmarks import common
 from repro.core.scoring import (calibrate_thresholds, gate_output_correlation,
-                                precision_decisions, unimportance_scores,
-                                PREC_HI, PREC_LO, PREC_SKIP)
-from repro.models import Batch, unstack_layers
+                                unimportance_scores)
+from repro.models import unstack_layers
 from repro.models import moe as moe_lib
 from repro.models import layers as L
 

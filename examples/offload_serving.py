@@ -13,7 +13,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_variant

@@ -18,9 +18,8 @@ from repro.data.pipeline import DataConfig, batches, eval_batches, unigram_entro
 from repro.models import build_model
 from repro.training import checkpoint as ckpt
 from repro.training.optimizer import OptimizerConfig
-from repro.training.train_loop import (TrainState, init_state, make_eval_step,
+from repro.training.train_loop import (init_state, make_eval_step,
                                        train)
-from repro.training.optimizer import init_opt_state
 
 
 def main():

@@ -13,7 +13,6 @@ Layer kinds:  "attn" (global), "attn_local" (sliding window), "attn_chunked"
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 

@@ -1,7 +1,7 @@
 from repro.core.cache import CacheStarvation, CacheStats, MultidimensionalCache
 from repro.core.engine import EngineConfig, OffloadEngine
 from repro.core.loader import (AsyncExpertScheduler, DynamicExpertLoader,
-                               LoadTask)
+                               LoadTask, StagingEngine, measure_link_bps)
 from repro.core.policies import (FLD, LFU, LHU, LRU, MULTIDIM, NAMED_POLICIES,
                                  PolicyWeights)
 from repro.core.predictor import AdaptiveExpertPredictor, gating_input_similarity
@@ -15,7 +15,9 @@ from repro.core.simulator import (HARDWARE, HobbitSimConfig, JETSON_ORIN,
 
 __all__ = [
     "CacheStarvation", "CacheStats", "MultidimensionalCache", "EngineConfig",
-    "OffloadEngine", "AsyncExpertScheduler", "DynamicExpertLoader", "LoadTask", "FLD", "LFU", "LHU", "LRU", "MULTIDIM",
+    "OffloadEngine", "AsyncExpertScheduler", "StagingEngine",
+    "DynamicExpertLoader", "LoadTask", "measure_link_bps",
+    "FLD", "LFU", "LHU", "LRU", "MULTIDIM",
     "NAMED_POLICIES", "PolicyWeights", "AdaptiveExpertPredictor",
     "gating_input_similarity", "PREC_HI", "PREC_LO", "PREC_SKIP", "Thresholds",
     "calibrate_thresholds", "gate_output_correlation", "precision_decisions",

@@ -22,6 +22,11 @@ In-flight reservation state machine (one (key, precision) entry)::
     (the experts of the layer currently executing) never do.  If every
     resident is in flight, admission raises `CacheStarvation` and the
     caller drains the scheduler (clearing reservations) and retries.
+  * Reservations are keyed by (key, precision): the hi and lo copies of one
+    expert reserve independently, so the StagingEngine can cancel a queued
+    hi reservation (`cancel_inflight`, returning its slot to the free list)
+    and admit a lo replacement — or later upgrade a landed lo copy in place
+    by admitting the hi copy alongside it.
 
 Lifecycle hooks: `new_sequence()` resets records and pins at batch
 boundaries; `advance_token()` clears pins each decode step.  See
@@ -146,6 +151,24 @@ class MultidimensionalCache:
 
     def end_inflight(self, key: ExpertKey, high_precision: bool):
         self.inflight.pop((key, high_precision), None)
+
+    def cancel_inflight(self, key: ExpertKey,
+                        high_precision: bool) -> Optional[int]:
+        """Abort an in-flight reservation whose copy has NOT been issued yet
+        (StagingEngine precision downgrade): drop the reservation, remove the
+        entry from its pool and return the freed slot (or None when no such
+        reservation exists).  Reservations are keyed by (key, precision), so
+        cancelling the hi entry leaves a resident or in-flight lo copy of the
+        same expert untouched — a lo landing can later be upgraded in place
+        by simply admitting the hi copy alongside it."""
+        slot = self.inflight.pop((key, high_precision), None)
+        if slot is None:
+            return None
+        pool = self.hi if high_precision else self.lo
+        if pool.lookup(key) == slot:
+            pool.remove(key)
+            pool.free.append(slot)
+        return slot
 
     def is_inflight(self, key: ExpertKey, high_precision: bool) -> bool:
         return (key, high_precision) in self.inflight

@@ -17,7 +17,6 @@ the same separation the paper uses for its Fig. 9 analysis.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -25,10 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import ModelConfig
 from repro.core.cache import MultidimensionalCache
-from repro.core.loader import (ON_DEMAND, AsyncExpertScheduler,
-                               DynamicExpertLoader, LoadTask)
+from repro.core.loader import (ON_DEMAND, DynamicExpertLoader, LoadTask,
+                               StagingEngine, measure_link_bps)
 from repro.core.policies import MULTIDIM, PolicyWeights
 from repro.core.predictor import AdaptiveExpertPredictor
 from repro.core.scoring import (PREC_HI, PREC_LO, PREC_SKIP, Thresholds,
@@ -67,6 +65,20 @@ class EngineConfig:
     # stage prefetch copies on a background executor so they overlap compute
     # in wall clock (double-buffered).  False drains them synchronously.
     async_prefetch: bool = True
+    # multi-stream staging (core/loader.py StagingEngine): number of copy
+    # streams sharing the modeled H2D link (default one hi- + one lo-
+    # precision stream).  `ordered=True` with `streams=1` reproduces the
+    # PR-2 single-worker FIFO scheduler bit-for-bit (the parity reference);
+    # ordered=False issues biggest-gate-first within the nearest-deadline
+    # layer and may downgrade queued hi copies to lo under link pressure.
+    streams: int = 2
+    ordered: bool = False
+    # modeled H2D link bandwidth in GB/s.  None measures the host copy rate
+    # at startup (budget accounting only); an explicit value additionally
+    # *emulates* the link — each staged copy occupies its stream for
+    # bytes/link seconds — so contended-link behavior is measurable on this
+    # CPU-only container (benchmarks/decode_speedup.py uses this).
+    link_gbps: Optional[float] = None
     # paged KV cache: slots draw kv_page_size-token pages from a shared pool
     # of kv_pages pages (None = the dense equivalent, batch*ceil(max_len/
     # page)) instead of each slot allocating max_len up front; prompts then
@@ -141,8 +153,12 @@ class OffloadEngine:
             self.cache, ecfg.thresholds if ecfg.dynamic_loading
             else Thresholds(1.0, 1.0),
             self._fetch, lambda prec: self.expert_bytes[prec])
-        self.scheduler = AsyncExpertScheduler(
-            self.loader, self._stage, self._commit_staged)
+        link_bps = (ecfg.link_gbps * 1e9 if ecfg.link_gbps
+                    else measure_link_bps())
+        self.scheduler = StagingEngine(
+            self.loader, self._stage, self._commit_staged,
+            streams=ecfg.streams, ordered=ecfg.ordered, link_bps=link_bps,
+            emulate_link=ecfg.link_gbps is not None)
         self.predictor = AdaptiveExpertPredictor(
             self.routers, mc.top_k, p=ecfg.prefetch_p)
 
@@ -153,6 +169,9 @@ class OffloadEngine:
         self._gating_s = 0.0
         self._expert_dispatches = 0     # grouped-path compute dispatches
         self._union_reloads = 0         # same-layer contention re-fetches
+        self._layer_s_ema = 0.0         # per-layer compute EMA (deadline hints)
+        self._layer_period_ema = 0.0    # full layer period EMA (stream feed)
+        self._closed = False
         self._ovf_np = None             # lazy overflow staging buffers
         self.batch = 1
         self.max_len = 0
@@ -413,6 +432,7 @@ class OffloadEngine:
         """Allocate per-slot KV caches and reset serving state for a new
         (possibly multi-request) batch.  All slots start active; continuous-
         batching schedulers toggle individual slots via join()/release()."""
+        self._check_open()
         self.batch = batch
         self.max_len = max_len
         self.scheduler.flush()          # land any cross-batch in-flight loads
@@ -472,6 +492,7 @@ class OffloadEngine:
         anyway — the offload cache only serves the decode phase, matching the
         paper's deployment), then adopt the KV cache in the engine's
         per-layer layout.  Returns last-token logits (B, V)."""
+        self._check_open()
         prompts = np.asarray(prompts, np.int32)
         b, s = prompts.shape
         assert b == self.batch, (b, self.batch)
@@ -498,6 +519,7 @@ class OffloadEngine:
         """Admit one request into a free slot mid-flight (blocking): batch=1
         prefill, KV written into the slot's cache rows (dense) or its pages
         (paged).  Returns logits (V,)."""
+        self._check_open()
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert 0 <= slot < self.batch, (slot, self.batch)
         if self.ecfg.paged_kv:
@@ -530,6 +552,7 @@ class OffloadEngine:
         pages for `reserve_tokens` (default max_len) and queues the prompt
         for chunked prefill.  Dense KV: stashes the prompt (join_step then
         runs the one-shot prefill)."""
+        self._check_open()
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if self.ecfg.paged_kv:
             self._admission.begin(slot, prompt,
@@ -586,6 +609,7 @@ class OffloadEngine:
         MoE layer, async double-buffered prefetch) and the per-expert
         reference path (``grouped=False`` or host compute mode), kept as the
         numerics baseline the parity tests compare against."""
+        self._check_open()
         if self.ecfg.grouped and self.ecfg.compute_mode == "device":
             return self._decode_step_batch_grouped(tokens)
         return self._decode_step_batch_reference(tokens)
@@ -626,17 +650,22 @@ class OffloadEngine:
         already cover layer mi+1."""
         pred_entry: Dict[int, object] = {}
         # merge all rows' predictions per target layer so the async scheduler
-        # stages ONE job per layer instead of one tiny job per batch slot
+        # stages ONE job per layer instead of one tiny job per batch slot;
+        # each (expert, precision) pair keeps the LARGEST gate any row gave
+        # it — the staging engine issues biggest-gate-first under contention
         merged: Dict[int, List[Tuple[int, int]]] = {}
+        gmax: Dict[Tuple[int, int, int], float] = {}
         for r in rows:
             walk = self.predictor.adaptive_walk(h_host[r], mi, self.cache,
                                                 self.loader.th)
             walk_layers = set()
             for pr, dec in walk:
                 pairs = merged.setdefault(pr.layer, [])
-                for e, d in zip(pr.experts, dec):
+                for e, d, g in zip(pr.experts, dec, pr.gate_vals):
                     if (int(e), int(d)) not in pairs:
                         pairs.append((int(e), int(d)))
+                    gk = (pr.layer, int(e), int(d))
+                    gmax[gk] = max(gmax.get(gk, 0.0), float(g))
                 self._push_pending(pr, mi, r)
                 walk_layers.add(pr.layer)
                 if pr.layer == mi + 1:
@@ -649,9 +678,10 @@ class OffloadEngine:
         for layer, pairs in merged.items():
             experts = [e for e, _ in pairs]
             dec = np.asarray([d for _, d in pairs])
+            gates = np.asarray([gmax[(layer, e, d)] for e, d in pairs])
             if use_async:
                 self.scheduler.submit_prefetch(layer, experts, dec,
-                                               current_layer=mi)
+                                               current_layer=mi, gates=gates)
             else:
                 self.loader.enqueue_prefetch(layer, experts, dec)
         return pred_entry
@@ -687,6 +717,11 @@ class OffloadEngine:
             table, active_dev = self._paged_step_prologue(rows)
         row_trace = {r: [] for r in rows}
         for mi, li in enumerate(self.moe_layers):
+            t_layer0 = time.perf_counter()
+            # deadline hint: the staging engine budgets queued copies against
+            # (target_layer - mi) * per-layer compute seconds of link time
+            self.scheduler.set_deadline_clock(mi, self._layer_s_ema,
+                                              self._layer_period_ema)
             p = self.layer_params[li]
             x = self._attn_layer(li, x, table=table, active_dev=active_dev)
             h = ffn_in(p, x)                                   # (B,1,D)
@@ -726,6 +761,7 @@ class OffloadEngine:
                     mi, rows, h_host, use_async=ecfg.async_prefetch)
 
             # ---- loading ----
+            t_load0 = time.perf_counter()
             if ecfg.async_prefetch:
                 # barrier: land every prefetch targeting this layer (copies
                 # have been staging in the background since they were
@@ -735,6 +771,7 @@ class OffloadEngine:
                 self.scheduler.drain_on_demand(self.loader.take_queued(), mi)
             else:
                 self.loader.drain(mi)
+            t_load = time.perf_counter() - t_load0
 
             # ---- grouped expert compute: 1 hi + 1 lo dispatch ----
             # Union-overflow pairs (a same-layer neighbour's admission
@@ -765,6 +802,13 @@ class OffloadEngine:
                     e = int(tops[r][j])
                     is_hi = d_ == PREC_HI
                     slot = self.cache.lookup((mi, e), is_hi)
+                    if (slot is None and is_hi and ecfg.async_prefetch
+                            and self.scheduler.serves_lo_downgrade(mi, e)):
+                        # issue-time precision downgrade: the staging engine
+                        # replaced this hi copy with a lo one under link
+                        # pressure — compute from the lo pool this step
+                        is_hi = False
+                        slot = self.cache.lookup((mi, e), False)
                     if slot is None:
                         if is_hi:
                             self.cache.stats.misses_hi += 1
@@ -815,6 +859,19 @@ class OffloadEngine:
             for r in rows:
                 row_trace[r].append(self._trace_entry(mi, r, tops, gates,
                                                       pred_entry))
+            # downgrade markers are per-token decisions: consumed this layer,
+            # never carried into later steps' precision choices
+            self.scheduler.retire_layer(mi)
+            # per-layer compute EMA (loading time excluded) — the staging
+            # engine's deadline clock budgets link bytes against it — and
+            # full-period EMA (loading included) — its per-pump stream feed
+            dt_full = time.perf_counter() - t_layer0
+            dt = dt_full - t_load
+            self._layer_s_ema = (dt if self._layer_s_ema == 0.0
+                                 else 0.8 * self._layer_s_ema + 0.2 * dt)
+            self._layer_period_ema = (
+                dt_full if self._layer_period_ema == 0.0
+                else 0.8 * self._layer_period_ema + 0.2 * dt_full)
 
         self.positions = self.positions + jnp.asarray(
             self.active.astype(np.int32))
@@ -927,10 +984,21 @@ class OffloadEngine:
         return np.asarray(lg, np.float32)
 
     def close(self):
-        """Release the async scheduler's worker thread (also released
-        automatically when the engine is garbage-collected)."""
+        """Release the staging engine's worker threads (also released
+        automatically when the engine is garbage-collected).  Idempotent:
+        a second close is a no-op; stepping a closed engine raises
+        RuntimeError cleanly instead of failing deep inside the executor."""
+        if self._closed:
+            return
+        self._closed = True
         self.scheduler.flush()
         self.scheduler.shutdown()
+
+    def _check_open(self):
+        """Raise cleanly when serving entry points run after close()."""
+        if self._closed:
+            raise RuntimeError("OffloadEngine is closed; create a new engine "
+                               "(close() released its staging threads)")
 
     def decode_token(self, token: int) -> np.ndarray:
         """One HOBBIT decode step (batch=1 legacy API).  Returns logits (V,)."""

@@ -13,7 +13,7 @@ worth prefetching for) or after `p` layers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np

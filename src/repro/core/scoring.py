@@ -13,7 +13,7 @@ s > T2 -> skip.  e_0 always loads high precision.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import numpy as np
 

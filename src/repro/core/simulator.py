@@ -83,6 +83,16 @@ class HobbitSimConfig:
     lo_slots: int = 32
     hi_bytes: int = 0                         # filled by caller
     lo_bytes: int = 0
+    # multi-stream staging (mirrors core/loader.py StagingEngine so the
+    # simulated overlap_fraction stays comparable to the wall-clock one):
+    # streams=1 keeps the single-DMA-engine timeline of the paper's Fig. 9;
+    # streams>=2 gives hi- and lo-precision transfers their own copy engine.
+    streams: int = 1
+    # ordered=True issues prefetch transfers in prediction order (paper
+    # baseline); False issues biggest-gate-first and preempts a queued hi
+    # transfer with a lo replacement when the link cannot move the hi bytes
+    # before the target layer's compute starts (issue-time downgrade).
+    ordered: bool = True
 
 
 class OffloadSimulator:
@@ -99,11 +109,20 @@ class OffloadSimulator:
                                            cfg.lo_slots if system == "hobbit" else 0,
                                            weights)
         self.pending_prefetch_done_at = 0.0
+        self._nstreams = max(1, int(cfg.streams))
         self._stall_s = 0.0
         self._transfer_s = 0.0
+        self._per_stream_bytes = [0] * self._nstreams
+        self._downgrades = 0
+        self._reorders = 0
 
     def _bytes(self, prec: int) -> int:
         return self.cfg.hi_bytes if prec == PREC_HI else self.cfg.lo_bytes
+
+    def _stream_of(self, prec: int) -> int:
+        """hi transfers ride stream 0, lo transfers the second stream (the
+        StagingEngine's one-hi/one-lo split); streams=1 shares one engine."""
+        return 0 if (prec == PREC_HI or self._nstreams == 1) else 1
 
     # ------------------------------------------------------------------
     def run(self, trace: Trace, *, reset_per_sequence: bool = True) -> Dict:
@@ -112,13 +131,17 @@ class OffloadSimulator:
         self.cache.new_sequence()
         self._stall_s = 0.0         # transfer time on the critical path
         self._transfer_s = 0.0      # total link-busy time issued
+        self._per_stream_bytes = [0] * self._nstreams
+        self._downgrades = 0
+        self._reorders = 0
         for token in trace:
             t0 = t
             self.cache.advance_token()
             t = self._run_token(token, t)
             per_token.append(t - t0)
         # same accounting the engine reports for the real wall clock:
-        # overlap_fraction = share of transfer time hidden behind compute
+        # overlap_fraction = share of transfer time hidden behind compute;
+        # link_utilization = share of the timeline the modeled link was busy
         overlap = (max(0.0, 1.0 - self._stall_s / self._transfer_s)
                    if self._transfer_s > 0 else 0.0)
         return {
@@ -126,26 +149,51 @@ class OffloadSimulator:
             "tok_per_s": len(trace) / t if t > 0 else float("inf"),
             "per_token_s": per_token,
             "stats": self.cache.stats,
+            "cache": self.cache.stats.to_dict(),
             "load_stall_s": self._stall_s,
             "overlap_fraction": overlap,
+            "per_stream_bytes": list(self._per_stream_bytes),
+            "issue_reorders": self._reorders,
+            "precision_downgrades": self._downgrades,
+            "link_utilization": (min(1.0, self._transfer_s / t)
+                                 if t > 0 else 0.0),
         }
+
+    def _issue(self, link_free: List[float], t: float, prec: int) -> float:
+        """Occupy `prec`'s stream for one transfer issued at `t`; returns the
+        time the transfer lands."""
+        s = self._stream_of(prec)
+        dur = self.hw.load_s(self._bytes(prec))
+        link_free[s] = max(link_free[s], t) + dur
+        self._transfer_s += dur
+        self._per_stream_bytes[s] += self._bytes(prec)
+        return link_free[s]
 
     # ------------------------------------------------------------------
     def _run_token(self, token: List[TraceLayer], t: float) -> float:
-        """Timeline semantics (Fig. 9): a single DMA engine serializes
-        transfers (`link_free_at`); on-demand loads block the layer start;
-        prefetch for layer l+1 is issued when layer l's compute *starts* and
-        overlaps with it; in-flight (possibly wrong) prefetches are
-        non-interruptible — layer l+1's on-demand loads queue behind them."""
-        link_free_at = t
+        """Timeline semantics (Fig. 9, extended to N streams): each stream is
+        one DMA engine serializing its own transfers (`link_free[s]`; hi
+        transfers on stream 0, lo on stream 1 when streams >= 2); on-demand
+        loads block the layer start; prefetch for layer l+1 is issued when
+        layer l's compute *starts* and overlaps with it; in-flight (possibly
+        wrong) prefetches are non-interruptible — layer l+1's on-demand loads
+        queue behind them on their stream.  With ``ordered=False`` prefetch
+        transfers issue biggest-gate-first and a queued hi transfer that
+        cannot land before the target layer's compute begins is downgraded to
+        its lo replacement (the StagingEngine's issue-time precision
+        decision)."""
+        link_free = [t] * self._nstreams
         for li, tl in enumerate(token):
             # -------- on-demand fetches (block the layer) --------
             if self.system == "dense_layerwise":
                 need = self.hw.load_s(self.cfg.hi_bytes) * self._experts_per_layer(token)
-                link_free_at = max(link_free_at, t) + need
+                end = max(link_free[0], t) + need
+                link_free[0] = end
                 self._transfer_s += need
-                self._stall_s += link_free_at - t
-                t = link_free_at
+                self._per_stream_bytes[0] += (self.cfg.hi_bytes
+                                              * self._experts_per_layer(token))
+                self._stall_s += end - t
+                t = end
             else:
                 if self.system == "hobbit" and self.cfg.dynamic_loading:
                     dec = precision_decisions(tl.gate_vals, self.cfg.thresholds)
@@ -158,11 +206,9 @@ class OffloadSimulator:
                     self.cache.pin((li, e), is_hi)
                     slot = self.cache.probe((li, e), is_hi)
                     if slot is None:
-                        link_free_at = max(link_free_at, t) + \
-                            self.hw.load_s(self._bytes(d))
-                        self._transfer_s += self.hw.load_s(self._bytes(d))
-                        self._stall_s += link_free_at - t
-                        t = link_free_at           # on-demand load blocks
+                        end = self._issue(link_free, t, int(d))
+                        self._stall_s += end - t
+                        t = end                    # on-demand load blocks
                         self.cache.admit((li, e), is_hi, li)
 
             # -------- compute; prefetch for the NEXT layer overlaps --------
@@ -181,18 +227,39 @@ class OffloadSimulator:
                                                self.cfg.thresholds)
                 else:
                     pdec = np.full(len(nxt.pred_experts), PREC_HI)
-                for e, d in zip(nxt.pred_experts, pdec):
+                gates = (np.asarray(nxt.pred_gate_vals, float)
+                         if nxt.pred_gate_vals is not None
+                         else np.zeros(len(nxt.pred_experts)))
+                pairs = list(zip(nxt.pred_experts, pdec, gates,
+                                 range(len(pdec))))
+                if not self.cfg.ordered:
+                    issue_order = sorted(pairs, key=lambda p: (-p[2], p[3]))
+                    # inversions the gate sort introduced vs prediction order
+                    self._reorders += sum(
+                        1 for i, p in enumerate(issue_order)
+                        if any(q[3] < p[3] for q in issue_order[i + 1:]))
+                    pairs = issue_order
+                for e, d, _g, _i in pairs:
                     if d == PREC_SKIP:
                         continue
                     is_hi = d == PREC_HI
+                    if (not self.cfg.ordered and is_hi
+                            and self.cache.lookup((li + 1, e), True) is None):
+                        # issue-time budget check: can the hi bytes land
+                        # before layer li+1's compute starts, given what is
+                        # already queued on the hi stream?
+                        s = self._stream_of(PREC_HI)
+                        queue_s = max(0.0, link_free[s] - t)
+                        if (queue_s + self.hw.load_s(self.cfg.hi_bytes)
+                                > compute_end - t):
+                            self._downgrades += 1
+                            d, is_hi = PREC_LO, False
                     if self.cache.lookup((li + 1, e), is_hi) is None:
-                        # issued at compute start, overlapped; occupies link
-                        # (no immediate stall — if it is still in flight when
-                        # the next layer's on-demand loads queue behind it,
-                        # the wait surfaces there as stall)
-                        link_free_at = max(link_free_at, t) + \
-                            self.hw.load_s(self._bytes(d))
-                        self._transfer_s += self.hw.load_s(self._bytes(d))
+                        # issued at compute start, overlapped; occupies its
+                        # stream (no immediate stall — if it is still in
+                        # flight when the next layer's on-demand loads queue
+                        # behind it, the wait surfaces there as stall)
+                        self._issue(link_free, t, int(d))
                         self.cache.admit((li + 1, e), is_hi, li)
                         self.cache.pin((li + 1, e), is_hi)
             t = compute_end

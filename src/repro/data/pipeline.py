@@ -10,7 +10,7 @@ and quantization-accuracy experiments have a non-degenerate signal.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import numpy as np
 

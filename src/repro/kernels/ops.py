@@ -14,8 +14,6 @@ test validates the real kernel body.  ``mode`` selects:
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

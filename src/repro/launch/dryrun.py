@@ -25,7 +25,7 @@ import jax
 
 from repro.configs import ARCHS, ASSIGNED_ARCHS, INPUT_SHAPES, get_config, shape_supported
 from repro.launch.mesh import make_production_mesh, num_chips
-from repro.launch.roofline import Roofline, collective_bytes, model_flops
+from repro.launch.roofline import Roofline, model_flops
 
 
 def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,

@@ -82,6 +82,22 @@ def main():
     ap.add_argument("--lo-slots", type=int, default=8)
     ap.add_argument("--t1", type=float, default=0.6)
     ap.add_argument("--t2", type=float, default=0.9)
+    ap.add_argument("--streams", type=int, default=2,
+                    help="expert staging streams sharing the modeled H2D "
+                         "link (hobbit backend; default one hi- + one "
+                         "lo-precision stream)")
+    ap.add_argument("--ordered", action="store_true",
+                    help="FIFO staging issue (with --streams 1 this is the "
+                         "PR-2 parity scheduler; default is byte-budgeted "
+                         "biggest-gate-first issue with hi->lo downgrades "
+                         "under link pressure)")
+    ap.add_argument("--link-gbps", type=float, default=None,
+                    help="modeled H2D link bandwidth in GB/s; default "
+                         "measures the host copy rate at startup.  An "
+                         "explicit value also *emulates* the link (copies "
+                         "occupy their stream for bytes/link seconds) so "
+                         "contended-link behavior is observable on this "
+                         "CPU-only host")
     ap.add_argument("--hw", choices=list(HARDWARE), default="rtx4090",
                     help="hardware cost model for the simulated latency report")
     args = ap.parse_args()
@@ -104,7 +120,9 @@ def main():
         kind, model, params,
         engine_config=EngineConfig(
             hi_slots=args.hi_slots, lo_slots=args.lo_slots,
-            thresholds=Thresholds(args.t1, args.t2))
+            thresholds=Thresholds(args.t1, args.t2),
+            streams=args.streams, ordered=args.ordered,
+            link_gbps=args.link_gbps)
         if kind == "hobbit" else None,
         paged=args.paged_kv, page_size=args.page_size,
         kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk)
@@ -152,12 +170,19 @@ def main():
             "load_stall_s": round(stats["load_stall_s"], 4),
             "overlap_fraction": round(stats["overlap_fraction"], 3),
             "gating_s": round(stats["gating_s"], 4),
+            # multi-stream staging (StagingEngine; docs/METRICS.md)
+            "streams": stats["streams"],
+            "per_stream_bytes": stats["per_stream_bytes"],
+            "issue_reorders": stats["issue_reorders"],
+            "precision_downgrades": stats["precision_downgrades"],
+            "link_utilization": round(stats["link_utilization"], 3),
             "simulated_decode_tok_s": {k: round(v["tok_per_s"], 2)
                                        for k, v in sim.items()},
             "simulated_overlap_fraction": {k: round(v["overlap_fraction"], 3)
                                            for k, v in sim.items()},
             "hw_profile": hw.name,
         })
+    backend.close()         # release staging threads before reporting
     print(json.dumps(report))
 
 

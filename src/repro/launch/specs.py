@@ -10,12 +10,10 @@ plus the step function each shape lowers.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Tuple
+from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import INPUT_SHAPES, ModelConfig
 from repro.configs.base import InputShape
@@ -128,7 +126,6 @@ def input_specs(cfg: ModelConfig, shape_name: str, mesh) -> Tuple[Callable, tupl
         p_shard = sh.param_shardings(mesh, p_shapes)
         opt_shapes = jax.eval_shape(
             lambda p: init_opt_state(p, ocfg.moment_dtype), p_shapes)
-        opt_shard = dataclasses.replace  # noqa (documentation)
         from repro.training.optimizer import OptState
         opt_sh = OptState(step=repl,
                           mu=sh.param_shardings(mesh, opt_shapes.mu),

@@ -11,7 +11,6 @@ on a real TPU pod this launcher jits with the identical sharding rules.
 import argparse
 import dataclasses
 import json
-import os
 
 import jax
 
@@ -20,7 +19,7 @@ from repro.data.pipeline import DataConfig, batches, eval_batches
 from repro.models import build_model
 from repro.training import checkpoint as ckpt
 from repro.training.optimizer import OptimizerConfig
-from repro.training.train_loop import init_state, make_eval_step, train
+from repro.training.train_loop import make_eval_step, train
 
 
 def main():

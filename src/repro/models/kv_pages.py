@@ -32,7 +32,6 @@ See ``docs/ARCHITECTURE.md`` for how this fits the request lifecycle.
 
 from __future__ import annotations
 
-import math
 from typing import Dict, List, Optional, Tuple
 
 import jax

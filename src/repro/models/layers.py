@@ -9,14 +9,13 @@ Conventions:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import MLAConfig, ModelConfig
+from repro.configs.base import ModelConfig
 from repro.kernels import ops as kops
 from repro.models import shard_utils
 from repro.quant.quantize import QTensor

@@ -8,7 +8,6 @@ a flat per-layer view for its host-driven decode loop.
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -694,7 +693,6 @@ class Model:
             else:
                 dst = cache["blocks"][j]
                 cache["blocks"][j] = jax.vmap(fill_attn)(dst, src)
-        li = len(cfg.prefix_pattern) + cfg.num_blocks * per
         for i, c in enumerate(caches["tail"]):
             kind = cfg.tail_pattern[i]
             cache["tail"][i] = c if kind == "ssm" else fill_attn(cache["tail"][i], c)

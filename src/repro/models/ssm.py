@@ -11,12 +11,8 @@ state N = d_state, head dim P = head_dim, n_groups G (B/C shared per group).
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig
 from repro.models import layers
 
@@ -171,7 +167,6 @@ def ssm_decode(p, x, state, cfg: ModelConfig):
     proj = x[:, 0, :] @ p["in_proj"]                     # (B, cols)
     z, xbc, dt = _split_proj(proj, cfg)
     # rolling causal conv
-    k = p["conv_w"].shape[0]
     window = jnp.concatenate([state["conv"], xbc[:, None, :].astype(jnp.float32)], axis=1)
     wf = p["conv_w"].astype(jnp.float32)
     conv_out = jnp.einsum("bkc,kc->bc", window, wf) + p["conv_b"]

@@ -113,7 +113,14 @@ class InferenceBackend(Protocol):
 
     def stats(self) -> dict:
         """JSON-serializable backend counters (uniform keys: load_stall_s,
-        overlap_fraction, kv_pages_used, kv_page_fraction, ...)."""
+        overlap_fraction, precision_downgrades, issue_reorders,
+        link_utilization, kv_pages_used, kv_page_fraction, ...)."""
+        ...
+
+    def close(self) -> None:
+        """Release backend resources (offload backends: staging worker
+        threads).  Idempotent; serving entry points raise RuntimeError after
+        close instead of failing deep inside an executor."""
         ...
 
 
@@ -337,11 +344,17 @@ class DenseBackend:
         page-pool pressure (zeros under the dense allocator)."""
         s = {"backend": "dense", "batch": self.batch, "max_len": self.max_len,
              "load_stall_s": 0.0, "overlap_fraction": 0.0,
+             "precision_downgrades": 0, "issue_reorders": 0,
+             "link_utilization": 0.0, "per_stream_bytes": [],
              "kv_pages_used": 0, "kv_pages_total": 0,
              "kv_page_fraction": 0.0}
         if self.paged and self.kv is not None:
             s.update(self.kv.stats())
         return s
+
+    def close(self) -> None:
+        """Uniform teardown hook: resident weights hold no staging threads,
+        so this is a no-op (idempotent by construction)."""
 
 
 # --------------------------------------------------------------------------
@@ -400,6 +413,11 @@ class HobbitBackend:
         s = dict(self.engine.stats())
         s["backend"] = "hobbit"
         return s
+
+    def close(self) -> None:
+        """Release the engine's staging worker threads (idempotent; the
+        scheduler calls this on teardown)."""
+        self.engine.close()
 
 
 def make_backend(kind: str, model: Model, params, *, engine_config=None,

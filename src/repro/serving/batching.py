@@ -53,6 +53,7 @@ class Request:
     prefill_latency_s: float = 0.0  # this request's own (chunked) prefill
     decode_s: float = 0.0           # wall time of decode steps it rode in
     load_stall_s: float = 0.0       # share of expert-load stall in its steps
+    precision_downgrades: float = 0.0   # share of issue-time hi->lo downgrades
     total_latency_s: float = 0.0
 
 
@@ -113,7 +114,9 @@ class BatchingServer:
         outs: Dict[int, List[int]] = {}
         pending_tok: Dict[int, int] = {}
         step_idx = 0
-        last_stall = self.backend.stats().get("load_stall_s", 0.0)
+        stats0 = self.backend.stats()
+        last_stall = stats0.get("load_stall_s", 0.0)
+        last_downgrades = stats0.get("precision_downgrades", 0)
 
         def retire(slot: int):
             req = active.pop(slot)
@@ -175,15 +178,21 @@ class BatchingServer:
             t0 = time.time()
             logits = self.backend.step(tokens)
             dt = time.time() - t0
-            # expert-load stall accrued this step, split across the requests
-            # that rode in it (offload backends only; dense reports 0)
-            now_stall = self.backend.stats().get("load_stall_s", 0.0)
+            # expert-load stall and issue-time precision downgrades accrued
+            # this step, split across the requests that rode in it (offload
+            # backends only; dense reports 0)
+            step_stats = self.backend.stats()
+            now_stall = step_stats.get("load_stall_s", 0.0)
             stall = (now_stall - last_stall) / len(stepping)
             last_stall = now_stall
+            now_dg = step_stats.get("precision_downgrades", 0)
+            downgrades = (now_dg - last_downgrades) / len(stepping)
+            last_downgrades = now_dg
             nxt = self._sample(logits)
             for slot in stepping:
                 active[slot].decode_s += dt
                 active[slot].load_stall_s += stall
+                active[slot].precision_downgrades += downgrades
                 outs[slot].append(int(nxt[slot]))
                 pending_tok[slot] = int(nxt[slot])
             self._step_time_s += dt
@@ -191,6 +200,24 @@ class BatchingServer:
             self._occupancy_sum += len(stepping) + len(admitting)
             self._steps += 1
             step_idx += 1
+
+    # ------------------------------------------------------------------
+    def close(self):
+        """Scheduler teardown: close the backend so offload backends always
+        release their staging worker threads.  Idempotent (backend close is);
+        a closed server must not be run() again."""
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close()
+
+    def __enter__(self):
+        """Context-manager support: `with BatchingServer(...) as srv:`."""
+        return self
+
+    def __exit__(self, *exc):
+        """Always close the backend on scope exit, error or not."""
+        self.close()
+        return False
 
     # ------------------------------------------------------------------
     def stats(self) -> dict:
@@ -208,6 +235,14 @@ class BatchingServer:
             "mean_prefill_s": float(np.mean([r.prefill_latency_s for r in done])),
             "mean_decode_s": float(np.mean([r.decode_s for r in done])),
             "mean_load_stall_s": float(np.mean([r.load_stall_s for r in done])),
+            # issue-time hi->lo downgrades attributed to the requests that
+            # rode in the steps where the staging engine made them
+            "mean_precision_downgrades": float(np.mean(
+                [r.precision_downgrades for r in done])),
+            "precision_downgrades": backend_stats.get(
+                "precision_downgrades", 0),
+            "issue_reorders": backend_stats.get("issue_reorders", 0),
+            "link_utilization": backend_stats.get("link_utilization", 0.0),
             "mean_total_s": float(np.mean([r.total_latency_s for r in done])),
             # decode throughput over decode-step wall time only (queue wait
             # and prefill are reported separately above)

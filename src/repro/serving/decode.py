@@ -6,7 +6,6 @@ against a KV cache of length seq_len.
 
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax

@@ -2,14 +2,12 @@
 
 from __future__ import annotations
 
-import functools
 import time
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 from repro.models.model import Batch, Model
 from repro.training import optimizer as opt_lib
 from repro.training.optimizer import OptimizerConfig, OptState

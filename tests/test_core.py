@@ -2,7 +2,6 @@
 (hypothesis), policies, loader, predictor, simulator."""
 
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -105,7 +104,8 @@ def test_cache_admit_evicts_lowest_priority():
 
 def test_cache_pin_blocks_eviction():
     c = MultidimensionalCache(4, hi_slots=2, lo_slots=0, weights=LRU)
-    c.new_sequence(); c.advance_token()
+    c.new_sequence()
+    c.advance_token()
     c.admit((0, 0), True, 0)
     c.admit((1, 0), True, 0)
     c.pin((0, 0), True)                            # older, but pinned
@@ -123,7 +123,6 @@ def test_property_cache_never_exceeds_capacity(ops, hi, lo):
     for i, (layer, expert, is_hi) in enumerate(ops):
         if i % 7 == 0:
             c.advance_token()
-        pool_hi = is_hi and True
         if c.probe((layer, expert), is_hi) is None:
             c.admit((layer, expert), is_hi, layer)
         assert len(c.hi.slot_of) <= hi

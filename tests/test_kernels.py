@@ -1,7 +1,6 @@
 """Pallas kernel validation: interpret-mode kernel body vs pure-jnp oracle,
 swept over shapes, dtypes and bit widths."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

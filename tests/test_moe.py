@@ -6,7 +6,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -151,5 +150,6 @@ def test_grouped_dispatch_capacity_is_per_group():
     y4, _, _ = moe_lib.moe_forward(p, x, cfg, groups=4)
     # both run; grouped drops differ from global drops but stay bounded
     assert np.isfinite(np.asarray(y4)).all()
-    n1 = float(jnp.linalg.norm(y1)); n4 = float(jnp.linalg.norm(y4))
+    n1 = float(jnp.linalg.norm(y1))
+    n4 = float(jnp.linalg.norm(y4))
     assert 0.3 < n4 / max(n1, 1e-9) < 3.0

@@ -36,7 +36,8 @@ def test_predict_layers_clips_at_model_end():
 def test_adaptive_walk_stops_at_first_missing_layer():
     pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=3)
     cache = MultidimensionalCache(4, hi_slots=16, lo_slots=8, weights=LRU)
-    cache.new_sequence(); cache.advance_token()
+    cache.new_sequence()
+    cache.advance_token()
     h = np.random.default_rng(2).normal(size=32).astype(np.float32)
     th = Thresholds(1.0, 1.0)  # everything high precision
     # empty cache: layer 1 prediction must be the one returned
@@ -52,7 +53,8 @@ def test_adaptive_walk_stops_at_first_missing_layer():
 def test_adaptive_walk_pins_resident_predictions():
     pred = AdaptiveExpertPredictor(_routers(), top_k=2, p=1)
     cache = MultidimensionalCache(4, hi_slots=4, lo_slots=2, weights=LRU)
-    cache.new_sequence(); cache.advance_token()
+    cache.new_sequence()
+    cache.advance_token()
     h = np.random.default_rng(3).normal(size=32).astype(np.float32)
     preds = pred.predict_layers(h, 0, 1)
     for e in preds[0].experts:

@@ -1,0 +1,283 @@
+"""Multi-stream byte-budgeted staging engine tests: parity of the ordered
+single-stream configuration against the per-expert reference path, issue-time
+precision downgrades under a tight link budget, biggest-gate-first issue
+reordering, in-flight reservation cancellation, idempotent engine/server
+teardown, and the stats() JSON round-trip covering the new per-stream
+fields (engine, simulator and BatchingServer)."""
+
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (EngineConfig, LRU, MultidimensionalCache,
+                        OffloadEngine, PREC_HI, PREC_LO, StagingEngine,
+                        Thresholds)
+from repro.core.loader import DynamicExpertLoader
+from repro.core.simulator import (HobbitSimConfig, OffloadSimulator, RTX4090,
+                                  TraceLayer)
+from repro.configs import get_config, smoke_variant
+from repro.models import build_model
+from repro.serving.api import DenseBackend, HobbitBackend, generate
+from repro.serving.batching import BatchingServer, Request
+
+HI_BYTES, LO_BYTES = 1000, 100
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                        vocab=256)
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _unit_engine(*, streams=2, ordered=False, link_bps=None,
+                 stage_sleep=0.0, hi_slots=4, lo_slots=4):
+    """A StagingEngine over a fake host store: stage_fn logs its call order
+    (and optionally sleeps, keeping copies in flight while the test pumps);
+    commit_fn collects landed entries."""
+    cache = MultidimensionalCache(4, hi_slots, lo_slots, LRU)
+    cache.new_sequence()
+    cache.advance_token()
+    loader = DynamicExpertLoader(
+        cache, Thresholds(1.0, 1.0), lambda *a: None,
+        lambda prec: HI_BYTES if prec == PREC_HI else LO_BYTES)
+    staged_order, committed = [], []
+
+    def stage_fn(layer, expert, precision):
+        staged_order.append((layer, expert, precision))
+        if stage_sleep:
+            time.sleep(stage_sleep)
+        return {"layer": layer, "expert": expert}
+
+    eng = StagingEngine(loader, stage_fn, committed.extend,
+                        streams=streams, ordered=ordered, link_bps=link_bps)
+    return eng, cache, staged_order, committed
+
+
+# ------------------------------------------------------------- parity
+def test_ordered_single_stream_matches_reference_and_default(setup):
+    """`EngineConfig(streams=1, ordered=True)` is the pre-PR FIFO scheduler:
+    its tokens must equal the per-expert reference path's; the default
+    multi-stream budgeted config must also agree (no downgrades fire at the
+    measured link rate, so issue order cannot change numerics)."""
+    m, params = setup
+    base = dict(hi_slots=8, lo_slots=4)
+    prompts = np.random.default_rng(21).integers(0, 256, (3, 5))
+
+    def toks(ecfg):
+        return generate(HobbitBackend(OffloadEngine(m, params, ecfg)),
+                        prompts, 6, max_len=32).tokens
+
+    t_ref = toks(EngineConfig(grouped=False, async_prefetch=False, **base))
+    t_fifo = toks(EngineConfig(streams=1, ordered=True, **base))
+    t_budg = toks(EngineConfig(**base))     # default: streams=2, budgeted
+    np.testing.assert_array_equal(t_fifo, t_ref)
+    np.testing.assert_array_equal(t_budg, t_ref)
+
+
+# ----------------------------------------------- budgeted issue mechanics
+def test_budget_preemption_downgrades_queued_hi_job():
+    """A queued hi job whose bytes exceed the remaining link budget before
+    its deadline is preempted: hi reservation cancelled, lo replacement
+    reserved + staged, downgrade recorded for the compute path."""
+    eng, cache, staged, committed = _unit_engine(
+        link_bps=1e6, stage_sleep=0.25)
+    # budget window for layer 1 = 1 layer * 3 ms * 1e6 B/s * 0.5 safety =
+    # 1500 bytes; per-pump stream feed = 10 ms * 1e6 = 10000 bytes, so both
+    # jobs reach the issue decision while job 0 is still in flight
+    eng.set_deadline_clock(0, per_layer_s=3e-3, period_s=10e-3)
+    n = eng.submit_prefetch(1, [0, 1], np.array([PREC_HI, PREC_HI]),
+                            current_layer=0, gates=np.array([0.9, 0.8]))
+    assert n == 2
+    # job 0 fit the budget (1000 <= 1500); job 1 did not (1000+1000 > 1500)
+    assert eng.precision_downgrades == 1
+    assert (1, 1) in eng.downgraded
+    assert cache.lookup((1, 1), True) is None       # hi reservation cancelled
+    assert cache.is_inflight((1, 1), False)         # lo replacement in flight
+    eng.wait(1)
+    assert cache.lookup((1, 0), True) is not None   # hi copy landed
+    assert cache.lookup((1, 1), False) is not None  # lo replacement landed
+    assert eng.serves_lo_downgrade(1, 1)
+    precs = sorted(t.precision for t, _, _ in committed)
+    assert precs == sorted([PREC_HI, PREC_LO])
+    eng.retire_layer(1)
+    assert not eng.serves_lo_downgrade(1, 1)        # one-token decision
+    eng.shutdown()
+
+
+def test_biggest_gate_issues_first_within_layer():
+    """Within one deadline layer a stream issues the biggest-gate job first,
+    counting the FIFO inversion as an issue_reorder."""
+    eng, cache, staged, _ = _unit_engine(streams=1)
+    eng.submit_prefetch(2, [0, 1], np.array([PREC_HI, PREC_HI]),
+                        current_layer=0, gates=np.array([0.1, 0.9]))
+    eng.wait(2)
+    assert [e for _, e, _ in staged] == [1, 0]      # gate 0.9 before 0.1
+    assert eng.issue_reorders >= 1
+    eng.shutdown()
+
+
+def test_nearest_deadline_layer_issues_first():
+    """Across deadline layers the nearest layer's job overtakes an older
+    queued job for a later layer."""
+    eng, cache, staged, _ = _unit_engine(streams=1, stage_sleep=0.05)
+    eng.submit_prefetch(3, [0], np.array([PREC_HI]), current_layer=0)
+    eng.submit_prefetch(3, [1], np.array([PREC_HI]), current_layer=0)
+    eng.submit_prefetch(1, [2], np.array([PREC_HI]), current_layer=0)
+    # job for layer 3/expert 0 is in flight; jobs (3,1) and (1,2) are queued:
+    # once the stream frees, the layer-1 job must overtake the older (3,1)
+    time.sleep(0.15)
+    eng._pump()
+    eng.wait_all()
+    assert [(lay, e) for lay, e, _ in staged] == [(3, 0), (1, 2), (3, 1)]
+    assert eng.issue_reorders >= 1
+    eng.shutdown()
+
+
+def test_cancel_inflight_returns_slot_and_keeps_other_precision():
+    """cancel_inflight drops only the (key, precision) reservation it names:
+    the slot returns to the free list and a lo copy of the same expert is
+    untouched (precision-keyed reservations)."""
+    c = MultidimensionalCache(4, hi_slots=1, lo_slots=1, weights=LRU)
+    c.new_sequence()
+    c.advance_token()
+    s_lo, _ = c.admit((0, 7), False, 0)
+    s_hi, _ = c.admit((0, 7), True, 0)
+    c.begin_inflight((0, 7), True, s_hi)
+    assert c.cancel_inflight((0, 7), True) == s_hi
+    assert c.lookup((0, 7), True) is None
+    assert s_hi in c.hi.free                        # slot reusable
+    assert c.lookup((0, 7), False) == s_lo          # lo copy untouched
+    assert c.cancel_inflight((0, 7), True) is None  # idempotent
+
+
+# ------------------------------------------------------------- teardown
+def test_engine_close_idempotent_and_step_raises(setup):
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(hi_slots=8, lo_slots=4))
+    generate(HobbitBackend(eng), np.array([[1, 2, 3]]), 3, max_len=16)
+    eng.close()
+    eng.close()                                     # second close: no-op
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.decode_step_batch(np.array([1], np.int32))
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.start_batch(1, 8)
+
+
+def test_batching_server_close_releases_staging_threads(setup):
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(hi_slots=8, lo_slots=4))
+    rng = np.random.default_rng(3)
+    with BatchingServer(HobbitBackend(eng), max_batch=2, max_len=32) as srv:
+        for i in range(2):
+            srv.submit(Request(rid=i, prompt=rng.integers(0, 256, 4),
+                               max_new_tokens=3))
+        srv.run()
+        assert len(srv.completed) == 2
+    # scope exit closed the backend -> engine closed, worker threads released
+    assert eng._closed
+    assert not eng.scheduler._finalizer.alive
+    srv.close()                                     # idempotent
+
+
+def test_dense_backend_close_is_noop(setup):
+    cfg = smoke_variant(get_config("granite-3-2b"), layers=2, d_model=64,
+                        vocab=128)
+    cfg = dataclasses.replace(cfg, dtype="float32")
+    m = build_model(cfg)
+    be = DenseBackend(m, m.init(jax.random.PRNGKey(0)))
+    be.close()
+    be.close()
+    be.start_batch(1, 8)                            # still usable
+
+
+# ------------------------------------------------------- stats round-trip
+def _roundtrip_same_keys(stats: dict) -> dict:
+    """json round-trip must preserve the exact key set (serving contract)."""
+    back = json.loads(json.dumps(stats))
+    assert set(back) == set(stats)
+    return back
+
+
+NEW_FIELDS = ("per_stream_bytes", "issue_reorders", "precision_downgrades",
+              "link_utilization")
+
+
+def test_engine_stats_json_roundtrip_with_stream_fields(setup):
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(hi_slots=8, lo_slots=4))
+    generate(HobbitBackend(eng), np.array([[1, 2, 3]]), 4, max_len=16)
+    s = eng.stats()
+    back = _roundtrip_same_keys(s)
+    for f in NEW_FIELDS + ("streams", "link_gbps"):
+        assert f in back, f
+    assert back["streams"] == 2
+    assert isinstance(back["per_stream_bytes"], list)
+    assert len(back["per_stream_bytes"]) == 2
+    assert sum(back["per_stream_bytes"]) > 0        # prefetch traffic issued
+    eng.close()
+
+
+def test_simulator_stats_json_roundtrip_with_stream_fields():
+    rng = np.random.default_rng(5)
+    trace = []
+    for _ in range(6):
+        token = []
+        for _li in range(3):
+            g = np.sort(rng.random(2))[::-1]
+            token.append(TraceLayer(experts=rng.permutation(8)[:2].tolist(),
+                                    gate_vals=g,
+                                    pred_experts=rng.permutation(8)[:2].tolist(),
+                                    pred_gate_vals=np.sort(rng.random(2))[::-1]))
+        trace.append(token)
+    cfg = HobbitSimConfig(hi_slots=4, lo_slots=2, hi_bytes=10_000_000,
+                          lo_bytes=2_500_000, streams=2, ordered=False)
+    res = OffloadSimulator("hobbit", 3, RTX4090, cfg).run(trace)
+    ser = {k: v for k, v in res.items() if k != "stats"}   # CacheStats object
+    back = _roundtrip_same_keys(ser)
+    for f in NEW_FIELDS:
+        assert f in back, f
+    assert len(back["per_stream_bytes"]) == 2
+    assert back["cache"]["hits"] == res["stats"].hits      # dict mirror
+
+
+def test_simulator_single_stream_default_unchanged():
+    """streams=1/ordered=True (the default) must reproduce the single-DMA
+    timeline: one stream, all bytes on it, no downgrades or reorders."""
+    rng = np.random.default_rng(6)
+    trace = [[TraceLayer(experts=[0, 1], gate_vals=np.array([0.6, 0.3]),
+                         pred_experts=[2, 3],
+                         pred_gate_vals=np.array([0.5, 0.2]))
+              for _ in range(2)] for _ in range(4)]
+    cfg = HobbitSimConfig(hi_slots=4, lo_slots=2, hi_bytes=1_000_000,
+                          lo_bytes=250_000)
+    res = OffloadSimulator("hobbit", 2, RTX4090, cfg).run(trace)
+    assert len(res["per_stream_bytes"]) == 1
+    assert res["precision_downgrades"] == 0
+    assert res["issue_reorders"] == 0
+
+
+def test_server_stats_json_roundtrip_with_stream_fields(setup):
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(hi_slots=8, lo_slots=4))
+    rng = np.random.default_rng(7)
+    with BatchingServer(HobbitBackend(eng), max_batch=2, max_len=32) as srv:
+        for i in range(2):
+            srv.submit(Request(rid=i, prompt=rng.integers(0, 256, 4),
+                               max_new_tokens=3))
+        srv.run()
+        s = srv.stats()
+    back = _roundtrip_same_keys(s)
+    for f in ("precision_downgrades", "issue_reorders", "link_utilization",
+              "mean_precision_downgrades"):
+        assert f in back, f
+    for f in NEW_FIELDS:
+        assert f in back["backend"], f

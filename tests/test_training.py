@@ -2,8 +2,6 @@
 checkpoint roundtrip, bf16-moment mode, data pipeline determinism."""
 
 import dataclasses
-import os
-
 import jax
 import jax.numpy as jnp
 import numpy as np

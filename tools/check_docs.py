@@ -8,10 +8,12 @@ Two checks, both hard failures:
    as files move.
 
 2. **Public symbols are documented** — every public module / class /
-   function / method in the serving API surface (``src/repro/serving/api.py``)
-   and the paged KV pool (``src/repro/models/kv_pages.py``) must carry a
-   docstring.  These two modules are the protocol seam new backends build
-   against, so undocumented symbols there are treated as build breaks.
+   function / method in the serving API surface (``src/repro/serving/api.py``),
+   the paged KV pool (``src/repro/models/kv_pages.py``) and the expert
+   loader / staging engine (``src/repro/core/loader.py``) must carry a
+   docstring.  These modules are the protocol seams new backends and
+   schedulers build against, so undocumented symbols there are treated as
+   build breaks.
 """
 
 from __future__ import annotations
@@ -27,6 +29,7 @@ MD_FILES = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
 DOCSTRING_MODULES = [
     ROOT / "src" / "repro" / "serving" / "api.py",
     ROOT / "src" / "repro" / "models" / "kv_pages.py",
+    ROOT / "src" / "repro" / "core" / "loader.py",
 ]
 
 # [text](target) — excluding images; tolerate titles after the target
