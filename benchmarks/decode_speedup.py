@@ -32,6 +32,7 @@ from benchmarks import common
 from repro.core import (EngineConfig, HobbitSimConfig, OffloadEngine,
                         simulate_systems)
 from repro.core.simulator import JETSON_ORIN, RTX4090
+from repro.core.scoring import PREC_HI, precision_decisions
 from repro.quant.quantize import expert_nbytes
 
 FULL_DIMS = {
@@ -158,6 +159,167 @@ def contended_link_rows(kind, model, params, *, smoke, batch=4):
     ]
 
 
+def upgrade_recovery_rows(kind, model, params, *, smoke):
+    """Idle-link upgrade recovery: a contention burst (batch 4, tight hi
+    pool, ~10 ms emulated hi copy) preempts queued hi prefetches to lo; the
+    load then drops to one slot decoding a stationary token stream (the
+    post-burst idle phase), and the upgrade pass must re-promote every
+    downgraded hot expert — the served-lo fraction over the final quarter
+    decays to ~0 (`upgrade_recovery_served_lo_final_fraction`, CI-gated)
+    while upgrades-off keeps re-downgrading the same hot experts forever
+    (the permanent-quantization failure mode this pass exists to prevent).
+
+    Wall-clock stall on this host swings 20-40% with machine load, so the
+    acceptance gate "upgrades-on stall <= 1.05x upgrades-off" is enforced on
+    the *simulator's* deterministic per-stream timeline (same idle-link
+    upgrade rule, `sim_upgrade_stall_ratio`); the wall-clock stalls and
+    their ratio are reported as informational rows."""
+    from repro.serving.api import HobbitBackend
+
+    cfg = model.cfg
+    d, f = cfg.d_model, cfg.moe.d_ff_expert
+    hi_b = expert_nbytes(d, f, 16)
+    link_gbps = hi_b / 10e-3 / 1e9      # one hi copy ~10 ms
+    burst, idle = (10, 14) if smoke else (12, 18)
+    window = max(1, idle // 4)          # final quarter of the idle phase:
+    #                                     shared by the served-lo numerator
+    #                                     and the hi-decision denominator
+    k, n_moe = cfg.moe.top_k, sum(cfg.layer_is_moe())
+    # the hi pool must hold the single-slot idle-phase working set (k experts
+    # per MoE layer) with a little headroom — but stays far below the burst's
+    # batch-4 union demand, so the burst genuinely contends
+    hi_slots = k * n_moe + 4
+    lo_slots = max(4, k * n_moe // 2)
+
+    def serve(upgrade):
+        eng = OffloadEngine(model, params, EngineConfig(
+            hi_slots=hi_slots, lo_slots=lo_slots, prefetch_p=2,
+            link_gbps=link_gbps, upgrade=upgrade))
+        backend = HobbitBackend(eng)
+        rng = np.random.default_rng(0)
+        steps = burst + idle
+        arr = rng.integers(0, cfg.vocab_size, (4, steps + 4))
+        backend.start_batch(4, steps + 8)
+        for r in range(4):
+            backend.join(r, arr[r, :1].astype(np.int32))
+        per_step, last = [], 0
+        for t in range(1, steps + 1):
+            if t == burst + 1:
+                for r in range(1, 4):   # the burst ends: load drops to 1 slot
+                    backend.release(r)
+            tok = arr[:, t] if t <= burst else np.full(4, 7)
+            backend.step(tok.astype(np.int32))
+            s = eng.stats()
+            per_step.append(s["served_lo_expert_steps"] - last)
+            last = s["served_lo_expert_steps"]
+        stats = eng.stats()
+        # exact hi-decided expert-steps of the final window, recomputed from
+        # the routing trace (one trace entry per idle step: single live row)
+        hi_final = sum(
+            int((precision_decisions(np.asarray(tl.gate_vals),
+                                     eng.loader.th) == PREC_HI).sum())
+            for token in eng.trace[-window:] for tl in token)
+        backend.close()
+        return stats, per_step, hi_final
+
+    on, per_on, hi_final = serve(True)
+    off, per_off, _ = serve(False)
+    # denominator = ACTUAL hi decisions in the same window (lo/skip
+    # decisions must not dilute the recovery gate)
+    final_fraction = sum(per_on[-window:]) / max(hi_final, 1)
+    ratio = on["load_stall_s"] / max(off["load_stall_s"], 1e-9)
+    rows = [
+        (f"upgrade_recovery_link_gbps[{kind}]", round(link_gbps, 4),
+         "emulated H2D link (one hi copy ~10 ms)"),
+        (f"upgrade_recovery_downgrades[{kind}]", on["precision_downgrades"],
+         "hi prefetches preempted to lo during the burst (upgrades on)"),
+        (f"upgrade_recovery_upgrades[{kind}]", on["upgrades"],
+         "idle-link hi re-copies issued (CI gate: >= 1)"),
+        (f"upgrade_recovery_upgrade_bytes[{kind}]", on["upgrade_bytes"],
+         "bytes those re-copies moved (never counted against deadlines)"),
+        (f"upgrade_recovery_served_lo[{kind}][on]",
+         on["served_lo_expert_steps"],
+         "lo-for-hi expert-steps, upgrades on (transient exposure)"),
+        (f"upgrade_recovery_served_lo[{kind}][off]",
+         off["served_lo_expert_steps"],
+         "same, upgrades off (PR-4 per-token downgrade semantics)"),
+        (f"upgrade_recovery_served_lo_final_fraction[{kind}]",
+         round(final_fraction, 4),
+         "served-lo share of hi decisions over the final quarter "
+         "(CI gate: ~0 — every downgraded hot expert recovered)"),
+        (f"upgrade_recovery_load_stall_s[{kind}][on]",
+         round(on["load_stall_s"], 4),
+         "wall-clock stall, upgrades on (informational: host-load noisy)"),
+        (f"upgrade_recovery_load_stall_s[{kind}][off]",
+         round(off["load_stall_s"], 4), "same, upgrades off"),
+        (f"upgrade_recovery_stall_ratio[{kind}]", round(ratio, 3),
+         "on/off wall stall (informational; the deterministic gate is "
+         "sim_upgrade_stall_ratio)"),
+    ]
+    rows.extend(_sim_upgrade_rows())
+    return rows
+
+
+def _sim_upgrade_rows():
+    """Deterministic counterpart of the wall-clock recovery section on the
+    simulator's per-stream timeline (same idle-link upgrade rule as
+    `StagingEngine._pump_upgrades`): a 12-token rotating burst queues two
+    ~0.8-compute-window hi transfers per layer (the second always misses the
+    budget and downgrades), then 16 stationary tokens reuse one hot expert
+    set.  No wall clock anywhere, so the <= 1.05x stall-ratio acceptance
+    gate holds exactly on any machine."""
+    from repro.core.simulator import (HardwareModel, OffloadSimulator,
+                                      TraceLayer)
+
+    L, E = 4, 8
+    hw = HardwareModel("upgrade-bench", link_gbps=1.0,
+                       compute_s_per_layer=3e-3)
+    hi_b = int(0.8 * hw.compute_s_per_layer * hw.link_gbps * 1e9)
+    lo_b = hi_b // 8
+    g = np.array([0.5, 0.45])           # both selections decide hi (Eq. 2)
+
+    def tok(experts, preds):
+        return [TraceLayer(experts=list(experts[li]), gate_vals=g,
+                           pred_experts=list(preds[li]),
+                           pred_gate_vals=g) for li in range(L)]
+
+    burst, idle = 12, 16
+    rot = lambda t: [[(2 * t + li) % E, (2 * t + li + 1) % E]  # noqa: E731
+                     for li in range(L)]
+    stationary = [[0, 1]] * L
+    trace = []
+    for t in range(burst):
+        trace.append(tok(rot(t), rot(t + 1) if t + 1 < burst else stationary))
+    for _ in range(idle):
+        trace.append(tok(stationary, stationary))
+
+    def sim(upgrade, n=None):
+        cfg = HobbitSimConfig(hi_slots=10, lo_slots=8, hi_bytes=hi_b,
+                              lo_bytes=lo_b, streams=2, ordered=False,
+                              upgrade=upgrade)
+        return OffloadSimulator("hobbit", L, hw, cfg).run(
+            trace if n is None else trace[:n])
+
+    on, off = sim(True), sim(False)
+    # served-lo accrued over the last 4 stationary tokens (delta vs prefix)
+    tail = (on["served_lo_expert_steps"]
+            - sim(True, len(trace) - 4)["served_lo_expert_steps"])
+    ratio = on["load_stall_s"] / max(off["load_stall_s"], 1e-12)
+    return [
+        ("sim_upgrade_downgrades[synthetic]", on["precision_downgrades"],
+         "simulated issue-time downgrades during the burst"),
+        ("sim_upgrade_upgrades[synthetic]", on["upgrades"],
+         "simulated idle-link hi re-copies (CI gate: >= 1)"),
+        ("sim_upgrade_served_lo[synthetic]", on["served_lo_expert_steps"],
+         "simulated lo-for-hi expert-steps before recovery"),
+        ("sim_upgrade_served_lo_tail[synthetic]", tail,
+         "served-lo over the last 4 stationary tokens (CI gate: 0)"),
+        ("sim_upgrade_stall_ratio[synthetic]", round(ratio, 4),
+         "upgrades-on/off stall, deterministic timeline "
+         "(CI gate: <= 1.05; upgrades must ride idle link time only)"),
+    ]
+
+
 def mixed_length_serving_rows(kind, model, params, *, smoke):
     """Continuous serving of a mixed-length workload (prompts 16-512 tokens)
     under a FIXED device KV budget: the dense allocator charges every slot
@@ -229,6 +391,8 @@ def run(smoke: bool = False):
                                     steps=8 if smoke else 24))
         rows.extend(contended_link_rows(kind, model, params, smoke=smoke))
         if kind == "mixtral-smoke":
+            rows.extend(upgrade_recovery_rows(kind, model, params,
+                                              smoke=smoke))
             rows.extend(mixed_length_serving_rows(kind, model, params,
                                                   smoke=smoke))
         seqs = common.eval_token_stream(2 if smoke else 4)

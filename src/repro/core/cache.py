@@ -168,6 +168,10 @@ class MultidimensionalCache:
         if pool.lookup(key) == slot:
             pool.remove(key)
             pool.free.append(slot)
+        # a cancelled entry no longer exists — stale pins for it must not
+        # keep constraining _select_victim until the next advance_token
+        self.pinned.discard((key, high_precision))
+        self.hard_pinned.discard((key, high_precision))
         return slot
 
     def is_inflight(self, key: ExpertKey, high_precision: bool) -> bool:
@@ -183,6 +187,23 @@ class MultidimensionalCache:
         return any((k, high_precision) not in self.inflight
                    and (k, high_precision) not in self.hard_pinned
                    for k in pool.slot_of)
+
+    def peek_victim_priority(self, high_precision: bool,
+                             current_layer: int) -> Optional[float]:
+        """Eq. 3 priority of the resident the next admit() on a FULL pool
+        would evict, or None when admission is free (free slots) or nothing
+        is evictable.  Uses `_select_victim` itself (pure selection, no side
+        effects), so callers vetoing an admission that would evict something
+        hotter than what they admit — the StagingEngine upgrade pass — are
+        always comparing against the real eviction policy."""
+        pool = self.hi if high_precision else self.lo
+        if pool.free:
+            return None
+        try:
+            victim = self._select_victim(pool, high_precision, current_layer)
+        except CacheStarvation:
+            return None
+        return self.records.priority(victim, self.weights, current_layer)
 
     # ------------- queries -------------
     def lookup(self, key: ExpertKey, high_precision: bool) -> Optional[int]:

@@ -73,6 +73,18 @@ class EngineConfig:
     # layer and may downgrade queued hi copies to lo under link pressure.
     streams: int = 2
     ordered: bool = False
+    # idle-link upgrade pass: re-issue hi copies for experts whose hi
+    # prefetch was downgraded to lo under link pressure, hottest first,
+    # whenever the hi stream is idle and no deadline work is queued — the
+    # lo stand-in keeps serving (served_lo_expert_steps counts the
+    # exposure) until the hi copy lands, then compute switches back to hi.
+    # The substitution persists for as long as the link stays saturated
+    # (hi reloads for substituted keys are suppressed so they can't stall
+    # deadline barriers) and is undone at the first idle window.  False
+    # restores the PR-4 per-token semantics bit-identically: a downgrade
+    # serves lo for its own step only and the next step's hi request
+    # blocking-loads hi on demand.
+    upgrade: bool = True
     # modeled H2D link bandwidth in GB/s.  None measures the host copy rate
     # at startup (budget accounting only); an explicit value additionally
     # *emulates* the link — each staged copy occupies its stream for
@@ -158,7 +170,7 @@ class OffloadEngine:
         self.scheduler = StagingEngine(
             self.loader, self._stage, self._commit_staged,
             streams=ecfg.streams, ordered=ecfg.ordered, link_bps=link_bps,
-            emulate_link=ecfg.link_gbps is not None)
+            emulate_link=ecfg.link_gbps is not None, upgrade=ecfg.upgrade)
         self.predictor = AdaptiveExpertPredictor(
             self.routers, mc.top_k, p=ecfg.prefetch_p)
 
@@ -802,13 +814,21 @@ class OffloadEngine:
                     e = int(tops[r][j])
                     is_hi = d_ == PREC_HI
                     slot = self.cache.lookup((mi, e), is_hi)
+                    if (slot is not None and is_hi
+                            and self.cache.is_inflight((mi, e), True)):
+                        # an upgrade re-copy owns the slot but its bytes are
+                        # still landing (wait() never blocks on upgrades);
+                        # the slot holds no hi weights yet
+                        slot = None
                     if (slot is None and is_hi and ecfg.async_prefetch
                             and self.scheduler.serves_lo_downgrade(mi, e)):
                         # issue-time precision downgrade: the staging engine
                         # replaced this hi copy with a lo one under link
-                        # pressure — compute from the lo pool this step
+                        # pressure — compute from the lo pool until an
+                        # idle-link upgrade lands the hi copy
                         is_hi = False
                         slot = self.cache.lookup((mi, e), False)
+                        self.scheduler.served_lo_expert_steps += 1
                     if slot is None:
                         if is_hi:
                             self.cache.stats.misses_hi += 1

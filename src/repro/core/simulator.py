@@ -93,6 +93,15 @@ class HobbitSimConfig:
     # transfer with a lo replacement when the link cannot move the hi bytes
     # before the target layer's compute starts (issue-time downgrade).
     ordered: bool = True
+    # idle-link upgrade pass (mirrors StagingEngine._pump_upgrades so the
+    # simulated upgrade behavior stays comparable to wall clock): with
+    # ordered=False, a downgraded expert keeps serving its lo stand-in
+    # (counted in served_lo_expert_steps) and hi re-copies are issued for
+    # the hottest lo-substituted experts into hi-stream idle time that ends
+    # before the layer's compute does — never delaying a deadline transfer.
+    # False restores the per-token PR-4 semantics (next hi use blocking-
+    # loads hi on demand).
+    upgrade: bool = True
 
 
 class OffloadSimulator:
@@ -115,6 +124,12 @@ class OffloadSimulator:
         self._per_stream_bytes = [0] * self._nstreams
         self._downgrades = 0
         self._reorders = 0
+        # idle-link upgrade pass state (budgeted path only)
+        self._upgrade = bool(cfg.upgrade) and not cfg.ordered
+        self._lo_sub: set = set()       # downgraded keys served from lo
+        self._upgrades = 0
+        self._upgrade_bytes = 0
+        self._served_lo = 0
 
     def _bytes(self, prec: int) -> int:
         return self.cfg.hi_bytes if prec == PREC_HI else self.cfg.lo_bytes
@@ -134,6 +149,10 @@ class OffloadSimulator:
         self._per_stream_bytes = [0] * self._nstreams
         self._downgrades = 0
         self._reorders = 0
+        self._lo_sub = set()
+        self._upgrades = 0
+        self._upgrade_bytes = 0
+        self._served_lo = 0
         for token in trace:
             t0 = t
             self.cache.advance_token()
@@ -155,6 +174,9 @@ class OffloadSimulator:
             "per_stream_bytes": list(self._per_stream_bytes),
             "issue_reorders": self._reorders,
             "precision_downgrades": self._downgrades,
+            "upgrades": self._upgrades,
+            "upgrade_bytes": self._upgrade_bytes,
+            "served_lo_expert_steps": self._served_lo,
             "link_utilization": (min(1.0, self._transfer_s / t)
                                  if t > 0 else 0.0),
         }
@@ -205,6 +227,16 @@ class OffloadSimulator:
                     is_hi = d == PREC_HI
                     self.cache.pin((li, e), is_hi)
                     slot = self.cache.probe((li, e), is_hi)
+                    if (slot is None and is_hi and self._upgrade
+                            and (li, e) in self._lo_sub):
+                        if self.cache.lookup((li, e), False) is not None:
+                            # persistent downgrade substitution: serve the
+                            # lo stand-in until an upgrade lands hi
+                            self.cache.pin((li, e), False)
+                            self.cache.records.on_use((li, e), False)
+                            self._served_lo += 1
+                            continue
+                        self._lo_sub.discard((li, e))   # lo evicted: reload
                     if slot is None:
                         end = self._issue(link_free, t, int(d))
                         self._stall_s += end - t
@@ -230,8 +262,15 @@ class OffloadSimulator:
                 gates = (np.asarray(nxt.pred_gate_vals, float)
                          if nxt.pred_gate_vals is not None
                          else np.zeros(len(nxt.pred_experts)))
-                pairs = list(zip(nxt.pred_experts, pdec, gates,
-                                 range(len(pdec))))
+                # only pairs that will actually issue a transfer take part
+                # in the gate sort: counting inversions over skipped or
+                # already-resident predictions would report phantom
+                # issue_reorders the engine's metric never counts
+                pairs = [(e, d, g, i) for i, (e, d, g) in
+                         enumerate(zip(nxt.pred_experts, pdec, gates))
+                         if d != PREC_SKIP
+                         and self.cache.lookup((li + 1, e),
+                                               d == PREC_HI) is None]
                 if not self.cfg.ordered:
                     issue_order = sorted(pairs, key=lambda p: (-p[2], p[3]))
                     # inversions the gate sort introduced vs prediction order
@@ -254,6 +293,8 @@ class OffloadSimulator:
                                 > compute_end - t):
                             self._downgrades += 1
                             d, is_hi = PREC_LO, False
+                            if self._upgrade:
+                                self._lo_sub.add((li + 1, e))
                     if self.cache.lookup((li + 1, e), is_hi) is None:
                         # issued at compute start, overlapped; occupies its
                         # stream (no immediate stall — if it is still in
@@ -262,8 +303,49 @@ class OffloadSimulator:
                         self._issue(link_free, t, int(d))
                         self.cache.admit((li + 1, e), is_hi, li)
                         self.cache.pin((li + 1, e), is_hi)
+            if self._upgrade and self.system == "hobbit":
+                self._issue_upgrades(link_free, t, compute_end, li)
             t = compute_end
         return t
+
+    def _issue_upgrades(self, link_free: List[float], t: float,
+                        compute_end: float, li: int):
+        """Idle-link upgrade pass on the simulated timeline (the
+        StagingEngine rule): ONE hi re-copy per idle window — the analogue
+        of the engine's one-in-flight-per-stream cap — for the hottest
+        lo-substituted expert, issued only into hi-stream idle time that
+        ends before this layer's compute does, so a deadline transfer is
+        never delayed."""
+        s = self._stream_of(PREC_HI)
+        dur = self.hw.load_s(self.cfg.hi_bytes)
+        cands = []
+        for key in list(self._lo_sub):
+            if self.cache.lookup(key, False) is None:
+                self._lo_sub.discard(key)       # lo stand-in evicted
+                continue
+            if self.cache.lookup(key, True) is not None:
+                self._lo_sub.discard(key)       # hi already resident
+                continue
+            cands.append(key)
+        prio = lambda k: self.cache.records.priority(  # noqa: E731
+            k, self.cache.weights, li)
+        cands.sort(key=lambda k: -prio(k))
+        for key in cands:
+            if max(link_free[s], t) + dur > compute_end:
+                break                           # no idle budget left
+            # never evict a hi resident at least as hot as the promoted
+            # expert (same churn guard as StagingEngine._pump_upgrades,
+            # compared against the real eviction policy)
+            victim_p = self.cache.peek_victim_priority(True, li)
+            if victim_p is not None and victim_p >= prio(key):
+                break                           # candidates priority-sorted
+            self._issue(link_free, t, PREC_HI)
+            self.cache.admit(key, True, li)
+            self.cache.pin(key, True)
+            self._lo_sub.discard(key)
+            self._upgrades += 1
+            self._upgrade_bytes += self.cfg.hi_bytes
+            break                               # one re-copy per idle window
 
     def _experts_per_layer(self, token) -> int:
         # dense_layerwise streams every expert; infer expert count from trace

@@ -91,6 +91,13 @@ def main():
                          "PR-2 parity scheduler; default is byte-budgeted "
                          "biggest-gate-first issue with hi->lo downgrades "
                          "under link pressure)")
+    ap.add_argument("--upgrade", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="idle-link upgrade pass: re-issue hi copies for "
+                         "downgraded (lo-substituted) experts when the hi "
+                         "stream has leftover link budget, so downgrades "
+                         "stay temporary.  --no-upgrade restores the PR-4 "
+                         "per-token downgrade semantics")
     ap.add_argument("--link-gbps", type=float, default=None,
                     help="modeled H2D link bandwidth in GB/s; default "
                          "measures the host copy rate at startup.  An "
@@ -122,7 +129,7 @@ def main():
             hi_slots=args.hi_slots, lo_slots=args.lo_slots,
             thresholds=Thresholds(args.t1, args.t2),
             streams=args.streams, ordered=args.ordered,
-            link_gbps=args.link_gbps)
+            upgrade=args.upgrade, link_gbps=args.link_gbps)
         if kind == "hobbit" else None,
         paged=args.paged_kv, page_size=args.page_size,
         kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk)
@@ -175,6 +182,10 @@ def main():
             "per_stream_bytes": stats["per_stream_bytes"],
             "issue_reorders": stats["issue_reorders"],
             "precision_downgrades": stats["precision_downgrades"],
+            # idle-link upgrade pass: downgrade recovery + residual exposure
+            "upgrades": stats["upgrades"],
+            "upgrade_bytes": stats["upgrade_bytes"],
+            "served_lo_expert_steps": stats["served_lo_expert_steps"],
             "link_utilization": round(stats["link_utilization"], 3),
             "simulated_decode_tok_s": {k: round(v["tok_per_s"], 2)
                                        for k, v in sim.items()},

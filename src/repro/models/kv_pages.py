@@ -142,17 +142,27 @@ class PagedKVPool:
     # ------------- allocation -------------
     def ensure(self, slot: int, length: int):
         """Grow `slot` to cover `length` tokens, drawing pages from the free
-        list (the slot's own reservation first).  No-op if already covered."""
+        list (the slot's own reservation first).  No-op if already covered.
+
+        The draw is guarded against OTHER slots' reservations: a slot
+        growing without (or past) its own reservation may only take pages
+        the pool has not promised elsewhere, so the offender raises
+        PagePoolExhausted here — a properly-reserved slot can never lose a
+        promised page and hit exhaustion mid-decode."""
         target = pages_for(length, self.page_size)
         if target > self.max_pages_per_slot:
             raise ValueError(
                 f"slot {slot}: length {length} exceeds max_pages_per_slot")
         own = self.owned[slot]
         while len(own) < target:
-            if not self.free:
+            promised_to_others = int(self.reserved.sum()) - int(
+                self.reserved[slot])
+            if not self.free or len(self.free) - promised_to_others <= 0:
                 raise PagePoolExhausted(
                     f"slot {slot}: pool exhausted growing to {length} tokens "
-                    "(admit with reserve() to prevent this)")
+                    f"({len(self.free)} free, {promised_to_others} promised "
+                    "to other slots' reservations; admit with reserve() to "
+                    "prevent this)")
             pid = self.free.pop()
             self.table[slot, len(own)] = pid
             own.append(pid)

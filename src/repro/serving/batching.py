@@ -54,6 +54,9 @@ class Request:
     decode_s: float = 0.0           # wall time of decode steps it rode in
     load_stall_s: float = 0.0       # share of expert-load stall in its steps
     precision_downgrades: float = 0.0   # share of issue-time hi->lo downgrades
+    served_lo: float = 0.0          # share of lo-for-hi expert-steps in its
+    #                                 steps (accuracy-exposure proxy; decays
+    #                                 to 0 once upgrades land hi re-copies)
     total_latency_s: float = 0.0
 
 
@@ -117,6 +120,7 @@ class BatchingServer:
         stats0 = self.backend.stats()
         last_stall = stats0.get("load_stall_s", 0.0)
         last_downgrades = stats0.get("precision_downgrades", 0)
+        last_served_lo = stats0.get("served_lo_expert_steps", 0)
 
         def retire(slot: int):
             req = active.pop(slot)
@@ -188,11 +192,15 @@ class BatchingServer:
             now_dg = step_stats.get("precision_downgrades", 0)
             downgrades = (now_dg - last_downgrades) / len(stepping)
             last_downgrades = now_dg
+            now_sl = step_stats.get("served_lo_expert_steps", 0)
+            served_lo = (now_sl - last_served_lo) / len(stepping)
+            last_served_lo = now_sl
             nxt = self._sample(logits)
             for slot in stepping:
                 active[slot].decode_s += dt
                 active[slot].load_stall_s += stall
                 active[slot].precision_downgrades += downgrades
+                active[slot].served_lo += served_lo
                 outs[slot].append(int(nxt[slot]))
                 pending_tok[slot] = int(nxt[slot])
             self._step_time_s += dt
@@ -239,9 +247,17 @@ class BatchingServer:
             # rode in the steps where the staging engine made them
             "mean_precision_downgrades": float(np.mean(
                 [r.precision_downgrades for r in done])),
+            # lo-for-hi expert-steps attributed to the requests that rode in
+            # them: each request's accuracy exposure to downgrade
+            # substitution (decays toward 0 while idle-link upgrades land)
+            "mean_served_lo": float(np.mean([r.served_lo for r in done])),
             "precision_downgrades": backend_stats.get(
                 "precision_downgrades", 0),
             "issue_reorders": backend_stats.get("issue_reorders", 0),
+            "upgrades": backend_stats.get("upgrades", 0),
+            "upgrade_bytes": backend_stats.get("upgrade_bytes", 0),
+            "served_lo_expert_steps": backend_stats.get(
+                "served_lo_expert_steps", 0),
             "link_utilization": backend_stats.get("link_utilization", 0.0),
             "mean_total_s": float(np.mean([r.total_latency_s for r in done])),
             # decode throughput over decode-step wall time only (queue wait

@@ -154,6 +154,37 @@ def test_reservation_blocks_new_admission():
     assert pool.pages_used == 4
 
 
+def test_unreserved_growth_cannot_steal_reserved_pages():
+    """Regression: ensure() must not hand out pages another slot's
+    reservation promises — the unreserved grower raises PagePoolExhausted
+    at its own call site, and the reserved slot still grows to its full
+    budget afterwards (the reservation contract)."""
+    pool = PagedKVPool(num_layers=1, num_kv_heads=1, head_dim=4,
+                       dtype="float32", num_pages=4, page_size=4)
+    pool.start(2)
+    pool.reserve(0, 16)                 # all 4 pages promised to slot 0
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(1, 4)               # unreserved growth would steal one
+    pool.ensure(0, 16)                  # the promise is honored in full
+    assert pool.pages_used == 4
+
+
+def test_growth_past_own_reservation_cannot_steal():
+    """A slot growing past its own reservation competes as unreserved: it
+    must raise rather than take a page promised to a neighbour, and the
+    neighbour's reservation stays drawable."""
+    pool = PagedKVPool(num_layers=1, num_kv_heads=1, head_dim=4,
+                       dtype="float32", num_pages=4, page_size=4)
+    pool.start(2)
+    pool.reserve(0, 8)                  # 2 pages promised to slot 0
+    pool.reserve(1, 8)                  # 2 pages promised to slot 1
+    pool.ensure(0, 8)                   # slot 0 draws its own 2
+    with pytest.raises(PagePoolExhausted):
+        pool.ensure(0, 12)              # a 3rd page would rob slot 1
+    pool.ensure(1, 8)                   # slot 1's promise intact
+    assert pool.pages_used == 4
+
+
 # ------------------------------------------------------- scheduler behavior
 @pytest.mark.parametrize("kind", ["dense", "hobbit"])
 def test_exhausted_pool_queues_request_until_pages_free(setup, kind):

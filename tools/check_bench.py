@@ -16,9 +16,17 @@ win rots:
   must not collapse);
 * **invariants** — hard bounds that hold on any machine, e.g.
   ``contended_stall_ratio`` (multi-stream byte-budgeted staging must put
-  *less* loading time on the critical path than 1-stream FIFO) and minimum
+  *less* loading time on the critical path than 1-stream FIFO), minimum
   ``precision_downgrades``/``issue_reorders`` counts proving the budgeted
-  issue path actually exercised.
+  issue path actually exercised, and the upgrade-pass recovery gates:
+  ``upgrade_recovery_served_lo_final_fraction`` (after a contention burst
+  the idle-link upgrade pass must re-promote every downgraded hot expert,
+  so the served-lo share of hi decisions decays to ~0),
+  ``upgrade_recovery_upgrades`` >= 1, and the deterministic simulated
+  ``sim_upgrade_stall_ratio`` <= 1.05 (upgrades ride only idle link time:
+  stall with upgrades on stays within 5% of upgrades off — gated on the
+  simulator timeline because wall-clock stall swings 20-40% with runner
+  load, exactly the noise the contended stall slack exists for).
 
 A markdown delta table is printed to stdout and appended to the GitHub job
 summary (``$GITHUB_STEP_SUMMARY``) when present.  Refresh the baseline with
