@@ -26,7 +26,7 @@ def _collect(model, params, tokens):
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
     gate_norms, out_norms, scores, per_layer = [], [], [], []
     from repro.models.model import _layer_forward
-    for li, p in enumerate(flat):
+    for _li, p in enumerate(flat):
         h = L.apply_norm(p["ffn_norm"], x, cfg)
         hf = h.reshape(-1, d)
         r = moe_lib.route(p["ffn"]["router"], hf, cfg.moe)

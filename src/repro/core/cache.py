@@ -124,20 +124,23 @@ class MultidimensionalCache:
         # flight; it must never be evicted (the staged write would land on a
         # reassigned slot) and compute must wait() before reading the slot.
         self.inflight: Dict[Tuple[ExpertKey, bool], int] = {}
-        self.stats = CacheStats()
+        self.stats = CacheStats()          # owner: main-thread
 
     # ------------- sequence / token lifecycle -------------
+    # owner: main-thread
     def new_sequence(self):
         self.records.reset()
         self.pinned.clear()
         self.hard_pinned.clear()
 
+    # owner: main-thread
     def advance_token(self):
         self.records.advance_token()
         self.pinned.clear()
         self.hard_pinned.clear()
 
     # ------------- pinning (predicted experts; §3.3 "mask") -------------
+    # owner: main-thread
     def pin(self, key: ExpertKey, high_precision: bool, hard: bool = False):
         """Soft pins (predicted experts) yield under slot pressure; hard pins
         (the experts of the layer currently executing) never do."""
@@ -146,12 +149,15 @@ class MultidimensionalCache:
             self.hard_pinned.add((key, high_precision))
 
     # ------------- async-load reservations -------------
+    # owner: main-thread
     def begin_inflight(self, key: ExpertKey, high_precision: bool, slot: int):
         self.inflight[(key, high_precision)] = slot
 
+    # owner: main-thread
     def end_inflight(self, key: ExpertKey, high_precision: bool):
         self.inflight.pop((key, high_precision), None)
 
+    # owner: main-thread
     def cancel_inflight(self, key: ExpertKey,
                         high_precision: bool) -> Optional[int]:
         """Abort an in-flight reservation whose copy has NOT been issued yet
@@ -210,6 +216,7 @@ class MultidimensionalCache:
         pool = self.hi if high_precision else self.lo
         return pool.lookup(key)
 
+    # owner: main-thread
     def probe(self, key: ExpertKey, high_precision: bool, *,
               count_stats: bool = True) -> Optional[int]:
         """lookup + stats + usage record update on hit."""
@@ -230,6 +237,7 @@ class MultidimensionalCache:
         return slot
 
     # ------------- admission / eviction -------------
+    # owner: main-thread
     def admit(self, key: ExpertKey, high_precision: bool,
               current_layer: int) -> Tuple[int, Optional[ExpertKey]]:
         """Assign a slot for `key` (evicting the lowest-priority unpinned

@@ -142,11 +142,14 @@ class OffloadEngine:
         self.routers_dev = jnp.asarray(np.stack(self.routers))   # (L, D, E)
 
         # ---- device pools ----
+        # owner: main-thread — device pool handles are rebound on
+        # commit; a background rebind would race the dispatch gather
         self.pool_hi = {
             "wi": jnp.zeros((ecfg.hi_slots, d, wi_cols), self.dtype),
             "wo": jnp.zeros((ecfg.hi_slots, f, d), self.dtype),
         }
         qi, qo = self.storage_lo[0]["wi"], self.storage_lo[0]["wo"]
+        # owner: main-thread
         self.pool_lo = {
             "wi_data": jnp.zeros((ecfg.lo_slots, *qi.data.shape[1:]), jnp.int8),
             "wi_scale": jnp.zeros((ecfg.lo_slots, *qi.scale.shape[1:]), jnp.float32),
@@ -156,6 +159,7 @@ class OffloadEngine:
         self._qmeta = dict(bits=ecfg.lo_bits, group_size=ecfg.group_size, orig_k=0)
 
         # ---- manager / loader / predictor ----
+        # owner: main-thread
         self.cache = MultidimensionalCache(self.num_moe_layers, ecfg.hi_slots,
                                            ecfg.lo_slots, ecfg.policy)
         hi_b = expert_nbytes(d, f, 16)
@@ -237,7 +241,10 @@ class OffloadEngine:
             def scatter(pools, idx, values):
                 return [p.at[idx].set(v.astype(p.dtype))
                         for p, v in zip(pools, values)]
-            self._jit_cache[key] = jax.jit(scatter)
+            # donate the pool buffers: callers rebind the pools to the
+            # returned arrays immediately, so keeping the inputs alive would
+            # hold two full copies of every expert pool per commit
+            self._jit_cache[key] = jax.jit(scatter, donate_argnums=0)
         return self._jit_cache[key]
 
     def _commit_staged(self, entries):
@@ -493,7 +500,7 @@ class OffloadEngine:
         flat = [dict(c) for c in cache["prefix"]]
         for bi in range(cfg.num_blocks):
             for j in range(cfg.period):
-                flat.append(jax.tree_util.tree_map(lambda a: a[bi],
+                flat.append(jax.tree_util.tree_map(lambda a, bi=bi: a[bi],
                                                    cache["blocks"][j]))
         flat.extend(dict(c) for c in cache["tail"])
         return flat

@@ -303,9 +303,12 @@ class StagingEngine:
         # release the worker threads when the scheduler (engine) is collected
         self._finalizer = weakref.finalize(
             self, StagingEngine._shutdown_pools, self._pools)
-        self._jobs: List[_PrefetchJob] = []         # ordered (FIFO) path
-        self._pending: List[StagingJob] = []        # budgeted path: queued
-        self._issued: List[StagingJob] = []         # budgeted path: in flight
+        # owner: main-thread — the zero-lock scheduler queues: submit,
+        # issue, collect and land all run on the caller's thread; the
+        # stream executors only ever copy bytes (see class docstring)
+        self._jobs: List[_PrefetchJob] = []     # owner: main-thread
+        self._pending: List[StagingJob] = []    # owner: main-thread
+        self._issued: List[StagingJob] = []     # owner: main-thread
         self._seq = 0
         self._rr = {True: 0, False: 0}              # round-robin per class
         # deadline clock (engine hints): current layer + per-layer seconds
@@ -318,11 +321,13 @@ class StagingEngine:
         # issue-time downgrades the compute path should serve from lo
         # (per-token markers, retired each layer — the PR-4 semantics the
         # upgrade-off path keeps bit-identical)
+        # owner: main-thread
         self.downgraded: Set[Tuple[int, int]] = set()
         # persistent downgrade substitutions: keys whose hi copy was
         # preempted and whose lo copy stands in for it until an upgrade
         # lands a hi copy next to it (or the lo copy is evicted / flushed).
         # The upgrade pass draws its candidates from here.
+        # owner: main-thread
         self.lo_substituted: Set[Tuple[int, int]] = set()
         # observability (engine.stats() reads these)
         self.stall_s = 0.0              # wall time load work blocked compute

@@ -49,7 +49,9 @@ class PagePoolExhausted(RuntimeError):
 
 def pages_for(tokens: int, page_size: int) -> int:
     """Number of pages needed to hold `tokens` KV entries."""
-    return -(-int(tokens) // page_size) if tokens > 0 else 0
+    # `tokens` is always a host int (static at trace time when this runs
+    # under jit via init_cache), so int() here never blocks on a device value
+    return -(-int(tokens) // page_size) if tokens > 0 else 0  # analysis: ignore[host-sync-in-jit]
 
 
 class PagedKVPool:

@@ -721,7 +721,7 @@ def unstack_layers(cfg: ModelConfig, params):
     """Flatten (prefix, scanned blocks, tail) into a per-layer param list."""
     out = list(params["prefix"])
     for i in range(cfg.num_blocks):
-        blk = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+        blk = jax.tree_util.tree_map(lambda a, i=i: a[i], params["blocks"])
         out.extend(blk)
     out.extend(params["tail"])
     return out

@@ -58,7 +58,8 @@ def latest_step(ckpt_dir: str) -> int | None:
     p = os.path.join(ckpt_dir, "latest")
     if not os.path.exists(p):
         return None
-    return int(open(p).read().strip())
+    with open(p) as f:
+        return int(f.read().strip())
 
 
 def restore(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any, int]:
@@ -67,7 +68,8 @@ def restore(ckpt_dir: str, like: Any, step: int | None = None) -> tuple[Any, int
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
     data = np.load(os.path.join(ckpt_dir, f"step_{step}.npz"))
-    meta = json.load(open(os.path.join(ckpt_dir, f"step_{step}.json")))
+    with open(os.path.join(ckpt_dir, f"step_{step}.json")) as f:
+        meta = json.load(f)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     restored = []
     for i, leaf in enumerate(leaves_like):

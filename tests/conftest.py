@@ -1,13 +1,27 @@
 """Shared test helpers.
 
-`hypothesis` is an optional dev dependency: the property tests in
-test_core / test_layers / test_moe / test_quantize use it when available,
-but its absence must not error out collection of the whole suite.  Test
-modules import the real names when possible and fall back to these stubs,
-under which every ``@given`` test is collected as a zero-arg skip.
+Three roles:
+
+* make the repo root importable so tests can exercise the CI gates
+  (``tools.check_bench`` / ``tools.check_docs``) and the static analyzers
+  (``tools.analysis``) in-process;
+* ``hypothesis`` stubs — the property tests collect-but-skip cleanly when
+  hypothesis is not installed;
+* the TSan-lite race guard: every engine built anywhere in the suite gets
+  an `InstrumentedCache` (autouse fixture below), so the staging/engine
+  tests double as a runtime thread-confinement check;
+* jit recompilation counters (`jit_cache_sizes` / `assert_no_recompiles`)
+  for the steady-state compile-count guards in test_recompile_guard.py.
 """
 
+import pathlib
+import sys
+
 import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+if str(ROOT) not in sys.path:
+    sys.path.insert(0, str(ROOT))       # tools.* imports
 
 
 def hypothesis_stubs():
@@ -34,3 +48,40 @@ def hypothesis_stubs():
         return lambda f: f
 
     return given, settings, _AnyStrategy()
+
+
+@pytest.fixture(autouse=True)
+def thread_confined_cache(monkeypatch):
+    """Run every engine-built cache under the TSan-lite confinement guard.
+
+    `OffloadEngine` constructs its cache via the `MultidimensionalCache`
+    name imported into `repro.core.engine`; patching that binding swaps in
+    `InstrumentedCache`, which raises `ThreadConfinementError` the moment a
+    metadata mutator runs off the constructing thread.  Tests that build a
+    cache directly can opt in by instantiating `InstrumentedCache`."""
+    from repro.core import engine as engine_mod
+    from repro.core.cache_guard import InstrumentedCache
+
+    monkeypatch.setattr(engine_mod, "MultidimensionalCache",
+                        InstrumentedCache)
+    yield
+
+
+def jit_cache_sizes(fns: dict) -> dict:
+    """{name: compiled-variant count} for a dict of jitted callables (0 for
+    plain Python callables, e.g. engines running with jit disabled)."""
+    out = {}
+    for name, fn in fns.items():
+        size = getattr(fn, "_cache_size", None)
+        out[name] = int(size()) if callable(size) else 0
+    return out
+
+
+def assert_no_recompiles(before: dict, after: dict):
+    """Every jitted function's compile count must be unchanged."""
+    grew = {k: (before.get(k, 0), v) for k, v in after.items()
+            if v != before.get(k, 0)}
+    assert not grew, (
+        f"steady-state decode recompiled: {grew} — a shape or donation "
+        "changed between steps (fixed-P padding / page-table export "
+        "invariant violated)")

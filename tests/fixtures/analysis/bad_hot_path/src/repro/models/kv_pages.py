@@ -1,0 +1,1 @@
+"""Fixture stub (keeps the checker's default file set resolvable)."""

@@ -1,0 +1,26 @@
+"""Fixture: decode hot path with host syncs and an un-donated pool jit."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Model:
+    def decode_step(self, params, cache, tokens):
+        probs = jnp.ones((4,))
+        best = probs.item()                  # BAD: host sync inside jit
+        return best, cache
+
+    def decode_step_paged(self, params, k_pages, v_pages, tokens):
+        x = np.asarray(tokens)               # BAD: device->host transfer
+        return jnp.asarray(x), k_pages, v_pages
+
+    def prefill_chunk_paged(self, params, k_pages, v_pages, tokens):
+        return k_pages, v_pages
+
+
+def make_backend(model):
+    step = jax.jit(model.decode_step)
+    paged = jax.jit(model.decode_step_paged)     # BAD: pools not donated
+    prefill = jax.jit(model.prefill_chunk_paged, donate_argnums=(1, 2))
+    return step, paged, prefill

@@ -1,0 +1,38 @@
+"""Fixture: protocol + a backend that drifted from it."""
+
+from typing import Optional, Protocol
+
+
+class InferenceBackend(Protocol):
+    model: object
+
+    def start_batch(self, batch: int, max_len: int) -> None: ...
+
+    def step(self, tokens) -> object: ...
+
+    def release(self, slot: int) -> None: ...
+
+    def join_begin(self, slot: int, prompt,
+                   reserve_tokens: Optional[int] = None) -> None: ...
+
+    def stats(self) -> dict: ...
+
+
+class BrokenBackend:
+    """Missing release(); step() renamed its parameter; join_begin() made an
+    optional protocol parameter required; never assigns self.model."""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    def start_batch(self, batch, max_len):
+        pass
+
+    def step(self, toks):                       # signature-mismatch
+        return toks
+
+    def join_begin(self, slot, prompt, reserve_tokens):  # optional->required
+        pass
+
+    def stats(self):
+        return {}

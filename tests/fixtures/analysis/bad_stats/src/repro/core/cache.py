@@ -1,0 +1,6 @@
+"""Fixture: cache stats snapshot."""
+
+
+class CacheStats:
+    def to_dict(self):
+        return {"hits": 0, "misses": 0, "hit_ratio": 0.0}

@@ -1,0 +1,19 @@
+"""Fixture: engine stats() missing a parity key + an undocumented key."""
+
+
+class OffloadEngine:
+    def stats(self):
+        s = {
+            "cache": self.cache.stats.to_dict(),
+            "load_stall_s": 0.0,
+            "overlap_fraction": 0.0,
+            "per_stream_bytes": [],
+            "issue_reorders": 0,
+            "precision_downgrades": 0,
+            "upgrades": 0,
+            "upgrade_bytes": 0,
+            "served_lo_expert_steps": 0,
+            # "link_utilization" dropped -> engine-sim-parity
+            "mystery_counter": 1,           # undocumented-stat
+        }
+        return s

@@ -1,0 +1,18 @@
+"""Fixture: staging stats() grew a counter the simulator never mirrors."""
+
+
+class StagingEngine:
+    def stats(self):
+        return {
+            "load_stall_s": 0.0,
+            "overlap_fraction": 0.0,
+            "per_stream_bytes": [],
+            "issue_reorders": 0,
+            "precision_downgrades": 0,
+            "upgrades": 0,
+            "upgrade_bytes": 0,
+            "served_lo_expert_steps": 0,
+            "link_utilization": 0.0,
+            "copy_s": 0.0,
+            "secret_local_counter": 3,      # staging-sim-drift
+        }

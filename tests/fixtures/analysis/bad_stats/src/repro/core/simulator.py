@@ -1,0 +1,17 @@
+"""Fixture: simulator emitting the full parity-key set."""
+
+
+class OffloadSimulator:
+    def run(self):
+        return {
+            "cache": {},
+            "load_stall_s": 0.0,
+            "overlap_fraction": 0.0,
+            "per_stream_bytes": [],
+            "issue_reorders": 0,
+            "precision_downgrades": 0,
+            "upgrades": 0,
+            "upgrade_bytes": 0,
+            "served_lo_expert_steps": 0,
+            "link_utilization": 0.0,
+        }

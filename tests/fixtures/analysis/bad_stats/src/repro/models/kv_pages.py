@@ -1,0 +1,6 @@
+"""Fixture: KV page-pool stats."""
+
+
+class PagedKVPool:
+    def stats(self):
+        return {"kv_pages_used": 0}

@@ -1,0 +1,6 @@
+"""Fixture: batching server stats passthrough."""
+
+
+class BatchingServer:
+    def stats(self):
+        return {"requests": 0, "backend": {}}

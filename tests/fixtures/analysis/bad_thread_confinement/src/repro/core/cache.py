@@ -1,0 +1,15 @@
+"""Fixture: mini expert cache with main-thread-owned metadata."""
+
+
+class MultidimensionalCache:
+    def __init__(self):
+        self.pinned = set()         # owner: main-thread
+        self.slots = {}
+
+    # owner: main-thread
+    def admit(self, eid):
+        self.slots[eid] = True
+
+    # owner: main-thread
+    def pin(self, eid):
+        self.pinned.add(eid)

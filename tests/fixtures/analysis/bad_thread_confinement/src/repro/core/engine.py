@@ -1,0 +1,10 @@
+"""Fixture: engine wiring the broken loader to the cache."""
+
+from repro.core.cache import MultidimensionalCache
+from repro.core.loader import BrokenStagingEngine
+
+
+class OffloadEngine:
+    def __init__(self):
+        self.cache = MultidimensionalCache()
+        self.scheduler = BrokenStagingEngine(self.cache)

@@ -1,0 +1,29 @@
+"""Fixture: staging loader whose background worker touches cache metadata.
+
+Reproduces the PR 4 review bug — the eviction decision (`cache.admit`) made
+at *copy* time on the stream executor instead of at *submit* time on the
+main thread — plus an off-thread mutation of an owned queue and an
+off-thread rebind, one per thread-confinement invariant.
+"""
+
+from concurrent.futures import ThreadPoolExecutor
+
+
+class BrokenStagingEngine:
+    def __init__(self, cache):
+        self.cache = cache
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._pending = []          # owner: main-thread
+
+    def submit(self, task):
+        self._pending.append(task)          # fine: caller thread
+        self._pool.submit(self._stage_one, task)
+
+    def _stage_one(self, task):
+        self.cache.admit(task)              # BAD: eviction at copy time
+        self._pending.append(task)          # BAD: owned queue, executor thread
+        self._finish(task)
+
+    def _finish(self, task):
+        self.cache.pin(task)                # BAD: reached transitively
+        self._pending = []                  # BAD: owned attr rebound

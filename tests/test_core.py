@@ -140,7 +140,7 @@ def _mk_trace(n_tokens=20, n_layers=4, e=8, k=2, seed=0):
     trace = []
     for _ in range(n_tokens):
         tok = []
-        for li in range(n_layers):
+        for _li in range(n_layers):
             experts = rng.choice(e, size=k, replace=False)
             g = np.sort(rng.uniform(0.1, 1.0, k))[::-1]
             g = g / g.sum()

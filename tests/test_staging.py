@@ -293,7 +293,7 @@ def test_engine_upgrade_recovery_under_contention(setup):
             be.step(arr[:, t].astype(np.int32))
         for r in range(1, 4):                   # load drops: idle phase
             be.release(r)
-        for t in range(9, 19):
+        for _t in range(9, 19):
             be.step(np.full(4, 7, np.int32))
         s = eng.stats()
         be.close()

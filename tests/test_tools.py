@@ -1,0 +1,166 @@
+"""Tests for the standalone CI gates: tools/check_bench.py (bench-regression
+detection, invariant bounds, --update-baseline) and tools/check_docs.py
+(markdown-link and docstring checks), on synthetic JSON / tmp trees."""
+
+import json
+
+import pytest
+
+from tools import check_bench, check_docs
+
+
+def _bench(rows):
+    return {"rows": rows}
+
+
+BASELINE = {
+    "config": {"stall_regress_pct": 20.0, "stall_abs_slack_s": 0.01,
+               "overlap_drop": 0.2},
+    "metrics": {"contended_load_stall_s": 1.0,
+                "prefetch_overlap_fraction": 0.8,
+                "wallclock_load_stall_s": 0.5},
+    "invariants": {"contended_stall_ratio": {"max": 1.0,
+                                             "why": "multi-stream must win"},
+                   "precision_downgrades": {"min": 1,
+                                            "why": "budget path exercised"}},
+}
+
+GOOD_ROWS = {"contended_load_stall_s": 1.05,
+             "prefetch_overlap_fraction": 0.75,
+             "wallclock_load_stall_s": 0.6,
+             "contended_stall_ratio": 0.8,
+             "precision_downgrades": 3}
+
+
+# ------------------------------------------------------------ check_bench
+def test_compare_passes_within_slack():
+    failures, table = check_bench.compare(_bench(GOOD_ROWS), BASELINE)
+    assert failures == []
+    assert {t[0] for t in table} == set(BASELINE["metrics"]) | set(
+        BASELINE["invariants"])
+    assert all(t[-1] == "ok" for t in table)
+
+
+def test_compare_flags_stall_regression():
+    rows = dict(GOOD_ROWS, contended_load_stall_s=1.5)   # +50% > +20%+slack
+    failures, table = check_bench.compare(_bench(rows), BASELINE)
+    assert any("contended_load_stall_s" in f and "regressed" in f
+               for f in failures)
+    assert ("contended_load_stall_s" in t[0] and t[-1] == "FAIL"
+            for t in table)
+
+
+def test_compare_flags_overlap_floor():
+    rows = dict(GOOD_ROWS, prefetch_overlap_fraction=0.5)   # < 0.8 - 0.2
+    failures, _ = check_bench.compare(_bench(rows), BASELINE)
+    assert any("overlap_fraction" in f and "floor" in f for f in failures)
+
+
+def test_compare_flags_invariant_min_and_max():
+    rows = dict(GOOD_ROWS, contended_stall_ratio=1.3, precision_downgrades=0)
+    failures, _ = check_bench.compare(_bench(rows), BASELINE)
+    assert any("contended_stall_ratio" in f and "max" in f for f in failures)
+    assert any("precision_downgrades" in f and "min" in f for f in failures)
+    assert any("multi-stream must win" in f for f in failures)
+
+
+def test_compare_flags_missing_metric():
+    rows = {k: v for k, v in GOOD_ROWS.items()
+            if k != "prefetch_overlap_fraction"}
+    failures, table = check_bench.compare(_bench(rows), BASELINE)
+    assert any("missing" in f for f in failures)
+    assert any(t[-1] == "MISSING" for t in table)
+
+
+def test_wallclock_stall_not_gated():
+    # non-contended wall-clock stalls swing with runner load: informational
+    rows = dict(GOOD_ROWS, wallclock_load_stall_s=50.0)
+    failures, _ = check_bench.compare(_bench(rows), BASELINE)
+    assert failures == []
+    assert check_bench._gated("wallclock_load_stall_s") == ""
+    assert check_bench._gated("contended_load_stall_s") == "stall"
+    assert check_bench._gated("prefetch_overlap_fraction") == "overlap"
+
+
+def test_markdown_table_marks_failures():
+    failures, table = check_bench.compare(
+        _bench(dict(GOOD_ROWS, contended_load_stall_s=9.9)), BASELINE)
+    md = check_bench.markdown_table(table, failures)
+    assert "| `contended_load_stall_s` |" in md and "FAIL" in md
+    assert f"**{len(failures)} failure(s)**" in md
+
+
+def test_update_baseline_keeps_config_and_invariants(tmp_path):
+    bp = tmp_path / "baseline.json"
+    bp.write_text(json.dumps(BASELINE))
+    check_bench.update_baseline(_bench(GOOD_ROWS), bp)
+    out = json.loads(bp.read_text())
+    # only gated metrics are refreshed; bounds and config survive
+    assert out["metrics"] == {"contended_load_stall_s": 1.05,
+                              "prefetch_overlap_fraction": 0.75}
+    assert out["invariants"] == BASELINE["invariants"]
+    assert out["config"]["stall_abs_slack_s"] == 0.01
+
+
+def test_bench_main_exit_codes(tmp_path):
+    res = tmp_path / "results.json"
+    bp = tmp_path / "baseline.json"
+    res.write_text(json.dumps(_bench(GOOD_ROWS)))
+    # missing baseline -> failure with a hint
+    assert check_bench.main([str(res), "--baseline", str(bp)]) == 1
+    # create it, then gate cleanly
+    assert check_bench.main([str(res), "--baseline", str(bp),
+                             "--update-baseline"]) == 0
+    assert check_bench.main([str(res), "--baseline", str(bp)]) == 0
+    # regress a gated metric -> nonzero
+    bad = dict(GOOD_ROWS, contended_load_stall_s=9.9)
+    res.write_text(json.dumps(_bench(bad)))
+    assert check_bench.main([str(res), "--baseline", str(bp)]) == 1
+
+
+# ------------------------------------------------------------ check_docs
+@pytest.fixture
+def docs_tree(tmp_path, monkeypatch):
+    (tmp_path / "docs").mkdir()
+    readme = tmp_path / "README.md"
+    readme.write_text("[arch](docs/ARCH.md) and [web](https://x.invalid)\n")
+    (tmp_path / "docs" / "ARCH.md").write_text("see [up](../README.md)\n")
+    mod = tmp_path / "mod.py"
+    mod.write_text('"""Module doc."""\n\n\n'
+                   'def public():\n    """Doc."""\n\n\n'
+                   'def _private():\n    pass\n')
+    monkeypatch.setattr(check_docs, "ROOT", tmp_path)
+    monkeypatch.setattr(check_docs, "MD_FILES",
+                        [readme, tmp_path / "docs" / "ARCH.md"])
+    monkeypatch.setattr(check_docs, "DOCSTRING_MODULES", [mod])
+    return tmp_path
+
+
+def test_docs_main_clean(docs_tree, capsys):
+    assert check_docs.main() == 0
+    assert "check_docs: OK" in capsys.readouterr().out
+
+
+def test_docs_flags_broken_link(docs_tree):
+    (docs_tree / "README.md").write_text("[gone](docs/NOPE.md)\n")
+    errors = []
+    check_docs.check_markdown_links(errors)
+    assert errors and "broken link" in errors[0] and "NOPE.md" in errors[0]
+    assert check_docs.main() == 1
+
+
+def test_docs_flags_missing_docstring(docs_tree):
+    mod = docs_tree / "mod.py"
+    mod.write_text('"""Module doc."""\n\n\n'
+                   'class Pool:\n    """Doc."""\n\n'
+                   '    def stats(self):\n        return {}\n')
+    errors = []
+    check_docs.check_docstrings(errors)
+    assert any("Pool.stats" in e for e in errors)
+    assert check_docs.main() == 1
+
+
+def test_docs_private_symbols_exempt(docs_tree):
+    errors = []
+    check_docs.check_docstrings(errors)
+    assert errors == []     # _private carries no docstring yet passes

@@ -1,0 +1,3 @@
+"""Repo tooling: CI gates (`check_bench`, `check_docs`) and the static
+invariant analyzers (`tools.analysis`).  Package so the gates are importable
+from tests and the analyzers runnable as ``python -m tools.analysis``."""

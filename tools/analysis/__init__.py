@@ -1,0 +1,50 @@
+"""Repo-specific static invariant checkers (``python -m tools.analysis``).
+
+Four AST-driven checkers over the staging/serving core:
+
+* ``thread-confinement`` — no path from executor-submitted code into cache
+  metadata mutation or other ``# owner: main-thread`` state;
+* ``hot-path-purity`` — jit-traced decode code contains no host syncs, and
+  pool buffers passed to jitted functions are donated;
+* ``stats-schema`` — engine / simulator / server stats keys stay in sync
+  with each other and with docs/METRICS.md;
+* ``protocol-conformance`` — every ``*Backend`` implements the full
+  `InferenceBackend` surface with matching signatures.
+
+See docs/ANALYSIS.md for the annotation convention and suppression syntax.
+"""
+
+from __future__ import annotations
+
+import pathlib
+from typing import Dict, List, Optional, Sequence
+
+from tools.analysis import (hot_path_purity, protocol_conformance,
+                            stats_schema, thread_confinement)
+from tools.analysis.astutil import Violation, suppressed
+
+CHECKERS = {
+    thread_confinement.CHECKER: thread_confinement.run,
+    hot_path_purity.CHECKER: hot_path_purity.run,
+    stats_schema.CHECKER: stats_schema.run,
+    protocol_conformance.CHECKER: protocol_conformance.run,
+}
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+
+
+def run_all(root: Optional[pathlib.Path] = None,
+            names: Optional[Sequence[str]] = None
+            ) -> Dict[str, List[Violation]]:
+    """Run the selected checkers; inline ``# analysis: ignore`` suppressions
+    are applied here so every checker gets them uniformly."""
+    root = pathlib.Path(root) if root is not None else REPO_ROOT
+    selected = list(names) if names else list(CHECKERS)
+    out: Dict[str, List[Violation]] = {}
+    for name in selected:
+        if name not in CHECKERS:
+            raise KeyError(f"unknown checker {name!r}; "
+                           f"known: {', '.join(sorted(CHECKERS))}")
+        out[name] = [v for v in CHECKERS[name](root)
+                     if not suppressed(root, v)]
+    return out

@@ -1,0 +1,249 @@
+"""Shared AST infrastructure for the repo-specific invariant checkers.
+
+Everything in `tools.analysis` works on plain `ast` trees plus the raw
+source lines (the `# owner: main-thread` annotations live in comments, which
+the AST does not carry).  The helpers here are deliberately conservative:
+call resolution only follows edges it can prove (`self.method`, bare module
+functions, import aliases, constructor-bound callbacks), and every checker
+treats "could not resolve" as "do not flag" — the known-bad fixtures under
+``tests/fixtures/analysis/`` pin the resolution power we depend on.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+# trailing or preceding-line marker claiming a def / attribute for a thread
+OWNER_RE = re.compile(r"#\s*owner:\s*(?P<owner>[A-Za-z][\w-]*)")
+# inline suppression: `# analysis: ignore` or `# analysis: ignore[name,...]`
+SUPPRESS_RE = re.compile(r"#\s*analysis:\s*ignore(?:\[(?P<names>[^\]]*)\])?")
+
+MAIN_THREAD = "main-thread"
+
+
+@dataclasses.dataclass
+class Violation:
+    """One invariant violation, printable as ``file:line: [checker] ...``."""
+    checker: str
+    invariant: str
+    file: str
+    line: int
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.file}:{self.line}: [{self.checker}] "
+                f"{self.invariant} — {self.message}")
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """A parsed module: path, repo-relative name, raw lines, AST (None for
+    non-Python files such as markdown docs)."""
+    path: pathlib.Path
+    rel: str
+    text: str
+    lines: List[str]
+    tree: Optional[ast.Module]
+
+
+def load_source(root: pathlib.Path, rel: str) -> Optional[SourceFile]:
+    """Load (and, for ``.py``, parse) ``root/rel``; None when missing."""
+    path = pathlib.Path(root) / rel
+    if not path.is_file():
+        return None
+    text = path.read_text()
+    tree = ast.parse(text) if path.suffix == ".py" else None
+    return SourceFile(path=path, rel=rel, text=text,
+                      lines=text.splitlines(), tree=tree)
+
+
+def missing_file_violation(checker: str, rel: str) -> Violation:
+    """Config-drift guard: a checker's default input file vanished (likely a
+    rename) — fail loudly instead of silently checking nothing."""
+    return Violation(checker, "config-drift", rel, 1,
+                     "expected source file is missing; update the checker's "
+                     "file list in tools/analysis/ if it moved")
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    """A function or method definition with its defining context."""
+    qualname: str                 # "Class.method" or "function"
+    cls: Optional[str]            # enclosing class name, if a method
+    name: str
+    node: ast.AST                 # FunctionDef / AsyncFunctionDef
+    sf: SourceFile
+
+
+class CodeIndex:
+    """Classes, functions and import aliases across a set of source files."""
+
+    def __init__(self, files: Iterable[SourceFile]):
+        self.files: List[SourceFile] = list(files)
+        self.classes: Dict[str, ast.ClassDef] = {}
+        self.class_sf: Dict[str, SourceFile] = {}
+        self.class_bases: Dict[str, List[str]] = {}
+        self.functions: Dict[str, FuncInfo] = {}          # qualname -> info
+        self.module_functions: Dict[str, FuncInfo] = {}   # bare name -> info
+        self.methods_by_name: Dict[str, List[FuncInfo]] = {}
+        # per-file import aliases: local name -> dotted module path
+        self.aliases: Dict[str, Dict[str, str]] = {}
+        for sf in self.files:
+            self._index_file(sf)
+
+    def _index_file(self, sf: SourceFile):
+        amap = self.aliases.setdefault(sf.rel, {})
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    amap[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for a in node.names:
+                    amap[a.asname or a.name] = f"{node.module}.{a.name}"
+        for node in sf.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                info = FuncInfo(node.name, None, node.name, node, sf)
+                self.functions[node.name] = info
+                self.module_functions[node.name] = info
+            elif isinstance(node, ast.ClassDef):
+                self.classes[node.name] = node
+                self.class_sf[node.name] = sf
+                self.class_bases[node.name] = [
+                    b.id for b in node.bases if isinstance(b, ast.Name)]
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        info = FuncInfo(f"{node.name}.{item.name}",
+                                        node.name, item.name, item, sf)
+                        self.functions[info.qualname] = info
+                        self.methods_by_name.setdefault(
+                            item.name, []).append(info)
+
+    def resolve_method(self, cls: Optional[str],
+                       name: str) -> Optional[FuncInfo]:
+        """Look up ``cls.name`` walking single-inheritance bases by name."""
+        seen = set()
+        while cls and cls not in seen:
+            seen.add(cls)
+            info = self.functions.get(f"{cls}.{name}")
+            if info is not None:
+                return info
+            bases = self.class_bases.get(cls, [])
+            cls = bases[0] if bases else None
+        return None
+
+    def file_for_module(self, dotted: str) -> Optional[SourceFile]:
+        """Map a dotted module path to a loaded file (suffix match)."""
+        tail = dotted.replace(".", "/") + ".py"
+        for sf in self.files:
+            if sf.rel.endswith(tail):
+                return sf
+        return None
+
+
+def _code_line_after(sf: SourceFile, lineno: int) -> Optional[int]:
+    """First non-comment, non-blank line number strictly after `lineno`."""
+    for i in range(lineno, len(sf.lines)):
+        stripped = sf.lines[i].strip()
+        if stripped and not stripped.startswith("#"):
+            return i + 1
+    return None
+
+
+def owner_annotations(files: Iterable[SourceFile],
+                      owner: str = MAIN_THREAD
+                      ) -> Tuple[Dict[str, Tuple[str, int]],
+                                 Dict[str, Tuple[str, int]]]:
+    """Collect ``# owner: <owner>`` markers.
+
+    Returns (methods, attrs): maps from the *name* of an owned method /
+    ``self.<attr>`` assignment target to its (file, line) definition site.
+    Markers may trail the annotated line or sit on the line directly above
+    it (comment-only lines between the marker and the code are allowed).
+    """
+    methods: Dict[str, Tuple[str, int]] = {}
+    attrs: Dict[str, Tuple[str, int]] = {}
+    for sf in files:
+        marked: Set[int] = set()
+        for i, line in enumerate(sf.lines):
+            m = OWNER_RE.search(line)
+            if not m or m.group("owner") != owner:
+                continue
+            stripped = line.strip()
+            if stripped.startswith("#"):
+                nxt = _code_line_after(sf, i + 1)
+                if nxt is not None:
+                    marked.add(nxt)
+            else:
+                marked.add(i + 1)
+        if not marked:
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.lineno in marked:
+                    methods[node.name] = (sf.rel, node.lineno)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                if node.lineno not in marked:
+                    continue
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self"):
+                        attrs[t.attr] = (sf.rel, node.lineno)
+    return methods, attrs
+
+
+def suppressed(root: pathlib.Path, v: Violation,
+               _cache: Optional[dict] = None) -> bool:
+    """True when the flagged source line carries a matching
+    ``# analysis: ignore[...]`` marker (bare ``ignore`` matches anything)."""
+    path = pathlib.Path(root) / v.file
+    if not path.is_file():
+        return False
+    try:
+        line = path.read_text().splitlines()[v.line - 1]
+    except IndexError:
+        return False
+    m = SUPPRESS_RE.search(line)
+    if not m:
+        return False
+    names = m.group("names")
+    if not names:
+        return True
+    return v.invariant in {n.strip() for n in names.split(",")}
+
+
+def attr_chain(node: ast.AST) -> List[str]:
+    """Attribute chain names, innermost first: ``a.b.c`` -> ["a","b","c"]
+    (Name/Attribute chains only; anything else truncates the chain)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return list(reversed(parts))
+
+
+def call_name(call: ast.Call) -> Optional[str]:
+    """The called attribute/function name of a Call, if syntactic."""
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return None
+
+
+def dict_literal_keys(node: ast.Dict) -> Set[str]:
+    """String keys of a dict literal (non-constant keys are skipped)."""
+    out: Set[str] = set()
+    for k in node.keys:
+        if isinstance(k, ast.Constant) and isinstance(k.value, str):
+            out.add(k.value)
+    return out

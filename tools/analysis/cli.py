@@ -1,0 +1,58 @@
+"""CLI for the invariant checkers: ``python -m tools.analysis [options]``.
+
+Exit status 0 iff no checker reports a violation.  Every violation prints as
+``file:line: [checker] invariant — message`` so CI annotations and editors
+can jump straight to the offending line.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import Optional, Sequence
+
+from tools.analysis import CHECKERS, REPO_ROOT, run_all
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """Run checkers over ``--root`` (default: the repo); nonzero on any
+    violation."""
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis",
+        description="repo-specific static invariant checkers")
+    ap.add_argument("--root", default=str(REPO_ROOT),
+                    help="tree to analyze (default: the repo root; tests "
+                         "point this at known-bad fixture trees)")
+    ap.add_argument("--checker", action="append", dest="checkers",
+                    metavar="NAME", choices=sorted(CHECKERS),
+                    help="run only this checker (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="list available checkers and exit")
+    args = ap.parse_args(argv)
+
+    if args.list:
+        for name in sorted(CHECKERS):
+            print(name)
+        return 0
+
+    root = pathlib.Path(args.root).resolve()
+    results = run_all(root, args.checkers)
+    total = 0
+    for name in sorted(results):
+        violations = results[name]
+        if violations:
+            total += len(violations)
+            for v in sorted(violations, key=lambda v: (v.file, v.line)):
+                print(v.render())
+        else:
+            print(f"[{name}] OK")
+    if total:
+        print(f"\ntools.analysis: {total} violation(s) in {root}")
+        return 1
+    print(f"tools.analysis: OK ({len(results)} checker(s) clean)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

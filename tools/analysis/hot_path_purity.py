@@ -1,0 +1,363 @@
+"""Hot-path purity checker.
+
+The decode hot paths (`decode_step_batch` grouped dispatch,
+`decode_step_paged`, the jitted chunked-prefill calls) stay fast because of
+two hand-established invariants from PRs 2-4:
+
+1. **jitted bodies are pure device code** — no host syncs inside anything
+   `jax.jit` traces: ``.item()`` / ``.tolist()`` / ``np.asarray`` /
+   ``np.array`` / ``jax.device_get`` / ``block_until_ready`` /
+   ``float(...)``/``int(...)`` on non-constants.  (Host-side *wrappers* may
+   sync — that is where the step's single device->host transfer lives — so
+   only jit-traced regions are scanned.)
+2. **pool buffers are donated** — any jitted function taking the expert
+   pools or the paged KV pool buffers (params named ``pools`` / ``kp`` /
+   ``vp`` / ``k_pages`` / ``v_pages``) must donate them, otherwise every
+   step holds two copies of a pool alive and the fixed-P padding win is
+   lost.
+
+Jit registrations are discovered syntactically: ``jax.jit(fn, ...)``,
+``functools.partial(jax.jit, ...)`` decorators, and the engine's
+``self._jit(name, fn, donate=(...))`` helper.  Wrapped callables resolve
+through local defs, methods, import aliases, the ``model`` receiver hint,
+and one-hop closure factories (``fn = make_prefill_step(...)`` ->
+the factory's returned local def).  Unresolvable wrappers are skipped —
+the fixtures in tests/fixtures/analysis pin what must resolve.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.analysis.astutil import (CodeIndex, FuncInfo, SourceFile,
+                                    Violation, attr_chain, load_source,
+                                    missing_file_violation)
+
+CHECKER = "hot-path-purity"
+
+DEFAULT_FILES = (
+    "src/repro/core/engine.py",
+    "src/repro/serving/api.py",
+    "src/repro/serving/decode.py",
+    "src/repro/models/model.py",
+    "src/repro/models/layers.py",
+    "src/repro/models/kv_pages.py",
+    "src/repro/quant/quantize.py",
+)
+
+# decode-path entry points that must exist (config-drift guard: a rename
+# must not silently empty this checker)
+REQUIRED_ENTRY_POINTS = (
+    ("src/repro/models/model.py", "Model", "decode_step"),
+    ("src/repro/models/model.py", "Model", "decode_step_paged"),
+    ("src/repro/models/model.py", "Model", "prefill_chunk_paged"),
+)
+
+# method calls that synchronize device -> host
+SYNC_METHOD_CALLS = {"item", "tolist", "block_until_ready"}
+# dotted calls that synchronize (innermost alias resolved per file)
+SYNC_DOTTED_CALLS = {("np", "asarray"), ("np", "array"),
+                     ("numpy", "asarray"), ("numpy", "array"),
+                     ("jax", "device_get")}
+# jitted-function params that alias device pools and must be donated
+POOL_PARAMS = {"pools", "kp", "vp", "k_pages", "v_pages"}
+# attribute receivers with a known class (call resolution hint)
+RECEIVER_HINTS = {"model": "Model"}
+
+
+def _donated(call: ast.Call) -> Set[int]:
+    """Parse donate_argnums= / donate= keyword into a set of indices."""
+    for kw in call.keywords:
+        if kw.arg in ("donate_argnums", "donate"):
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                return {v.value}
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return {e.value for e in v.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)}
+    return set()
+
+
+class _Region:
+    """One jit-traced root: the wrapped function/lambda + its site."""
+
+    def __init__(self, node: ast.AST, info: Optional[FuncInfo],
+                 sf: SourceFile, site_line: int, donated: Set[int],
+                 drop_self: bool):
+        self.node = node            # FunctionDef or Lambda
+        self.info = info            # None for lambdas
+        self.sf = sf
+        self.site_line = site_line
+        self.donated = donated
+        self.drop_self = drop_self
+
+
+def _local_def(scope: ast.AST, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(scope):
+        if isinstance(node, (ast.FunctionDef,
+                             ast.AsyncFunctionDef)) and node.name == name:
+            return node
+    return None
+
+
+def _factory_return_def(factory: FuncInfo) -> Optional[ast.FunctionDef]:
+    """For closure factories: the local def the factory returns."""
+    for node in ast.walk(factory.node):
+        if isinstance(node, ast.Return) and isinstance(node.value, ast.Name):
+            d = _local_def(factory.node, node.value.id)
+            if d is not None:
+                return d
+    return None
+
+
+def _resolve_wrapped(idx: CodeIndex, sf: SourceFile,
+                     enclosing: Optional[FuncInfo], cls: Optional[str],
+                     expr: ast.AST
+                     ) -> Tuple[Optional[ast.AST], Optional[FuncInfo], bool]:
+    """Resolve the callable expression handed to jax.jit.
+
+    Returns (ast node, FuncInfo-or-None, drop_self) — drop_self is True for
+    bound methods, whose ``self`` is not a jit argument position.
+    """
+    if isinstance(expr, ast.Lambda):
+        return expr, None, False
+    if isinstance(expr, ast.Name):
+        if enclosing is not None:
+            d = _local_def(enclosing.node, expr.id)
+            if d is not None:
+                return d, None, False
+            # one-hop closure factory: name = factory(...) earlier in scope
+            for node in ast.walk(enclosing.node):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)
+                        and isinstance(node.value.func, ast.Name)
+                        and any(isinstance(t, ast.Name) and t.id == expr.id
+                                for t in node.targets)):
+                    factory = idx.module_functions.get(node.value.func.id)
+                    if factory is not None:
+                        d = _factory_return_def(factory)
+                        if d is not None:
+                            return d, None, False
+        info = idx.module_functions.get(expr.id)
+        if info is not None:
+            return info.node, info, False
+        return None, None, False
+    if isinstance(expr, ast.Attribute):
+        chain = attr_chain(expr)
+        if chain[:1] == ["self"] and len(chain) == 2 and cls:
+            info = idx.resolve_method(cls, chain[1])
+            if info is not None:
+                return info.node, info, True
+        # receiver hint: model.decode_step_paged, self.model.prefill, ...
+        recv = chain[-2] if len(chain) >= 2 else None
+        hinted = RECEIVER_HINTS.get(recv)
+        if hinted:
+            info = idx.resolve_method(hinted, chain[-1])
+            if info is not None:
+                return info.node, info, True
+    return None, None, False
+
+
+def _enclosing_function_map(sf: SourceFile,
+                            idx: CodeIndex) -> Dict[int, FuncInfo]:
+    """Map statement lineno -> innermost indexed function containing it."""
+    out: Dict[int, FuncInfo] = {}
+    for info in idx.functions.values():
+        if info.sf is not sf:
+            continue
+        end = getattr(info.node, "end_lineno", info.node.lineno)
+        for ln in range(info.node.lineno, end + 1):
+            prev = out.get(ln)
+            if prev is None or info.node.lineno > prev.node.lineno:
+                out[ln] = info
+    return out
+
+
+def _find_regions(idx: CodeIndex) -> Tuple[List[_Region], List[Violation]]:
+    regions: List[_Region] = []
+    violations: List[Violation] = []
+    for sf in idx.files:
+        by_line = _enclosing_function_map(sf, idx)
+        for node in ast.walk(sf.tree):
+            # decorator form: @partial(jax.jit, ...)
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if (isinstance(dec, ast.Call) and dec.args
+                            and attr_chain(dec.func)[-1:] == ["partial"]
+                            and attr_chain(dec.args[0])[-2:] == ["jax",
+                                                                 "jit"]):
+                        regions.append(_Region(node, None, sf, node.lineno,
+                                               _donated(dec), False))
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            chain = attr_chain(node.func)
+            wrapped = None
+            if chain[-2:] == ["jax", "jit"] and node.args:
+                wrapped = node.args[0]
+            elif chain == ["self", "_jit"] and len(node.args) >= 2:
+                wrapped = node.args[1]
+            if wrapped is None:
+                continue
+            enclosing = by_line.get(node.lineno)
+            cls = enclosing.cls if enclosing else None
+            fn_node, info, drop_self = _resolve_wrapped(
+                idx, sf, enclosing, cls, wrapped)
+            if fn_node is None:
+                # bare parameter (the _jit helper's own jax.jit call) or a
+                # dynamically built callable: nothing provable to scan
+                continue
+            regions.append(_Region(fn_node, info, sf, node.lineno,
+                                   _donated(node), drop_self))
+    return regions, violations
+
+
+def _params(node: ast.AST, drop_self: bool) -> List[str]:
+    args = node.args
+    names = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+    if drop_self and names and names[0] == "self":
+        names = names[1:]
+    return names
+
+
+def _region_calls(idx: CodeIndex, region_node: ast.AST, cls: Optional[str],
+                  sf: SourceFile) -> List[FuncInfo]:
+    """Provable callees of a jit-traced region (incl. fns passed as args)."""
+    out: List[FuncInfo] = []
+    amap = idx.aliases.get(sf.rel, {})
+
+    def resolve_name(name: str) -> Optional[FuncInfo]:
+        info = idx.module_functions.get(name)
+        return info
+
+    for node in ast.walk(region_node):
+        if not isinstance(node, ast.Call):
+            continue
+        cands: List[ast.AST] = [node.func]
+        cands += [a for a in node.args if isinstance(a, ast.Name)]
+        for expr in cands:
+            if isinstance(expr, ast.Name):
+                info = resolve_name(expr.id)
+                if info is not None:
+                    out.append(info)
+            elif isinstance(expr, ast.Attribute):
+                chain = attr_chain(expr)
+                if chain[:1] == ["self"] and len(chain) == 2 and cls:
+                    info = idx.resolve_method(cls, chain[1])
+                    if info is not None:
+                        out.append(info)
+                    continue
+                if len(chain) == 2 and chain[0] in amap:
+                    mod_sf = idx.file_for_module(amap[chain[0]])
+                    if mod_sf is not None:
+                        info = idx.module_functions.get(chain[1])
+                        if info is not None and info.sf is mod_sf:
+                            out.append(info)
+                    continue
+                recv = chain[-2] if len(chain) >= 2 else None
+                hinted = RECEIVER_HINTS.get(recv)
+                if hinted:
+                    info = idx.resolve_method(hinted, chain[-1])
+                    if info is not None:
+                        out.append(info)
+    return out
+
+
+def _scan_purity(sf: SourceFile, node: ast.AST, origin: str,
+                 amap: Dict[str, str]) -> List[Violation]:
+    violations: List[Violation] = []
+    np_aliases = {alias for alias, mod in amap.items()
+                  if mod in ("numpy", "np")} | {"np", "numpy"}
+    for n in ast.walk(node):
+        if not isinstance(n, ast.Call):
+            continue
+        chain = attr_chain(n.func)
+        if (isinstance(n.func, ast.Attribute)
+                and n.func.attr in SYNC_METHOD_CALLS):
+            violations.append(Violation(
+                CHECKER, "host-sync-in-jit", sf.rel, n.lineno,
+                f".{n.func.attr}() inside jit-traced code ({origin}) "
+                "synchronizes device->host on every call"))
+        elif (len(chain) == 2
+              and ((chain[0] in np_aliases and chain[1] in ("asarray",
+                                                            "array"))
+                   or tuple(chain) in SYNC_DOTTED_CALLS)):
+            violations.append(Violation(
+                CHECKER, "host-sync-in-jit", sf.rel, n.lineno,
+                f"{chain[0]}.{chain[1]}() inside jit-traced code ({origin}) "
+                "forces a device->host transfer"))
+        elif (isinstance(n.func, ast.Name) and n.func.id in ("float", "int")
+              and n.args and not isinstance(n.args[0], ast.Constant)):
+            violations.append(Violation(
+                CHECKER, "host-sync-in-jit", sf.rel, n.lineno,
+                f"{n.func.id}(...) on a non-constant inside jit-traced code "
+                f"({origin}) blocks on the device value"))
+    return violations
+
+
+def run(root: pathlib.Path,
+        rel_files: Sequence[str] = DEFAULT_FILES) -> List[Violation]:
+    """Check jit purity + pool donation over ``root``-relative files."""
+    violations: List[Violation] = []
+    files: List[SourceFile] = []
+    for rel in rel_files:
+        sf = load_source(root, rel)
+        if sf is None:
+            violations.append(missing_file_violation(CHECKER, rel))
+        else:
+            files.append(sf)
+    if not files:
+        return violations
+    idx = CodeIndex(files)
+
+    loaded_rels = {sf.rel for sf in files}
+    for rel, cls, meth in REQUIRED_ENTRY_POINTS:
+        if rel not in loaded_rels:
+            continue        # already reported missing above
+        if idx.resolve_method(cls, meth) is None:
+            violations.append(Violation(
+                CHECKER, "config-drift", rel, 1,
+                f"hot-path entry point {cls}.{meth} not found; update "
+                "tools/analysis/hot_path_purity.py if it was renamed"))
+
+    regions, extra = _find_regions(idx)
+    violations.extend(extra)
+
+    for region in regions:
+        origin = (region.info.qualname if region.info
+                  else f"jit site {region.sf.rel}:{region.site_line}")
+        # ---- donation rule on the jit root itself
+        params = _params(region.node, region.drop_self)
+        needed = {i for i, p in enumerate(params) if p in POOL_PARAMS}
+        missing = needed - region.donated
+        for i in sorted(missing):
+            violations.append(Violation(
+                CHECKER, "undonated-pool-buffer", region.sf.rel,
+                region.site_line,
+                f"jit of {origin} takes pool buffer '{params[i]}' at "
+                f"position {i} without donate_argnums — two live copies of "
+                "the pool per call"))
+        # ---- purity scan over the full traced call graph
+        seen_ids = set()
+        frontier: List[Tuple[ast.AST, Optional[str], SourceFile]] = [
+            (region.node, region.info.cls if region.info else None,
+             region.sf)]
+        while frontier:
+            fn_node, cls, sf = frontier.pop()
+            if id(fn_node) in seen_ids:
+                continue
+            seen_ids.add(id(fn_node))
+            violations.extend(_scan_purity(
+                sf, fn_node, origin, idx.aliases.get(sf.rel, {})))
+            for callee in _region_calls(idx, fn_node, cls, sf):
+                if id(callee.node) not in seen_ids:
+                    frontier.append((callee.node, callee.cls, callee.sf))
+    # the same function may be reached from several jit roots; flagging it
+    # once per root is noise — dedupe on (invariant, file, line)
+    uniq: Dict[Tuple[str, str, int], Violation] = {}
+    for v in violations:
+        uniq.setdefault((v.invariant, v.file, v.line), v)
+    return list(uniq.values())

@@ -1,0 +1,196 @@
+"""InferenceBackend protocol-conformance checker.
+
+`serving/api.py` defines the `InferenceBackend` Protocol that the batching
+server, benchmarks and examples program against.  Python Protocols are
+structural and unchecked at runtime on the happy path — a backend missing
+``release`` or accepting ``(self, toks)`` instead of ``(self, tokens)``
+only explodes when that exact seam is exercised.  This checker verifies,
+for every class named ``*Backend`` under ``src/repro/``:
+
+* each protocol method exists (own or single-inheritance base);
+* positional parameter names match the protocol's, in order;
+* parameters the protocol defaults must be defaulted by the implementation,
+  and any extra implementation parameters must carry defaults (callers
+  programming against the protocol will never pass them);
+* the ``model`` protocol attribute is assigned somewhere on the class.
+
+``**kwargs``-style escape hatches are honored (a method with ``*args`` /
+``**kwargs`` accepts any protocol call).
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence
+
+from tools.analysis.astutil import (CodeIndex, SourceFile, Violation,
+                                    load_source, missing_file_violation)
+
+CHECKER = "protocol-conformance"
+
+PROTOCOL_FILE = "src/repro/serving/api.py"
+PROTOCOL_CLASS = "InferenceBackend"
+
+DEFAULT_FILES = (PROTOCOL_FILE,)
+
+
+def _method_sigs(cls: ast.ClassDef) -> Dict[str, ast.arguments]:
+    return {n.name: n.args for n in cls.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def _positional(args: ast.arguments) -> List[str]:
+    return ([a.arg for a in args.posonlyargs]
+            + [a.arg for a in args.args])[1:]       # drop self
+
+
+def _defaulted(args: ast.arguments) -> set:
+    """Names of parameters that carry defaults (positional or kw-only)."""
+    pos = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+    out = set(pos[len(pos) - len(args.defaults):]) if args.defaults else set()
+    for a, d in zip(args.kwonlyargs, args.kw_defaults):
+        if d is not None:
+            out.add(a.arg)
+    return out
+
+
+def _protocol_attrs(cls: ast.ClassDef) -> List[str]:
+    """Annotated class-level attributes (the Protocol's data surface)."""
+    return [n.target.id for n in cls.body
+            if isinstance(n, ast.AnnAssign) and isinstance(n.target,
+                                                           ast.Name)]
+
+
+def _assigns_attr(idx: CodeIndex, cls_name: str, attr: str) -> bool:
+    seen = set()
+    while cls_name and cls_name not in seen:
+        seen.add(cls_name)
+        cls = idx.classes.get(cls_name)
+        if cls is None:
+            return False
+        for node in ast.walk(cls):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if (isinstance(t, ast.Attribute)
+                            and isinstance(t.value, ast.Name)
+                            and t.value.id == "self" and t.attr == attr):
+                        return True
+        bases = idx.class_bases.get(cls_name, [])
+        cls_name = bases[0] if bases else None
+    return False
+
+
+def _merged_methods(idx: CodeIndex,
+                    cls_name: str) -> Dict[str, ast.arguments]:
+    """Own + inherited (by-name, single-chain) method signatures."""
+    out: Dict[str, ast.arguments] = {}
+    seen = set()
+    while cls_name and cls_name not in seen:
+        seen.add(cls_name)
+        cls = idx.classes.get(cls_name)
+        if cls is None:
+            break
+        for name, args in _method_sigs(cls).items():
+            out.setdefault(name, args)
+        bases = idx.class_bases.get(cls_name, [])
+        cls_name = bases[0] if bases else None
+    return out
+
+
+def _wildcard(args: ast.arguments) -> bool:
+    return args.vararg is not None or args.kwarg is not None
+
+
+def default_files(root: pathlib.Path) -> List[str]:
+    """The protocol module plus every src/repro module defining a
+    ``*Backend`` class (cheap text pre-filter)."""
+    rels = [PROTOCOL_FILE]
+    base = pathlib.Path(root) / "src" / "repro"
+    if base.is_dir():
+        for p in sorted(base.rglob("*.py")):
+            rel = str(p.relative_to(root))
+            if rel not in rels and "Backend" in p.read_text():
+                rels.append(rel)
+    return rels
+
+
+def run(root: pathlib.Path,
+        rel_files: Optional[Sequence[str]] = None) -> List[Violation]:
+    """Check every *Backend class against the InferenceBackend protocol."""
+    if rel_files is None:
+        rel_files = default_files(root)
+    violations: List[Violation] = []
+    files: List[SourceFile] = []
+    for rel in rel_files:
+        sf = load_source(root, rel)
+        if sf is None:
+            violations.append(missing_file_violation(CHECKER, rel))
+        else:
+            files.append(sf)
+    if not files:
+        return violations
+    idx = CodeIndex(files)
+
+    proto = idx.classes.get(PROTOCOL_CLASS)
+    if proto is None:
+        violations.append(Violation(
+            CHECKER, "config-drift", PROTOCOL_FILE, 1,
+            f"protocol class {PROTOCOL_CLASS} not found; update "
+            "tools/analysis/protocol_conformance.py if it was renamed"))
+        return violations
+    proto_methods = _method_sigs(proto)
+    proto_attrs = _protocol_attrs(proto)
+
+    impls = [name for name in idx.classes
+             if name.endswith("Backend") and name != PROTOCOL_CLASS]
+    for name in sorted(impls):
+        cls = idx.classes[name]
+        sf = idx.class_sf[name]
+        methods = _merged_methods(idx, name)
+        for mname, pargs in sorted(proto_methods.items()):
+            iargs = methods.get(mname)
+            if iargs is None:
+                violations.append(Violation(
+                    CHECKER, "missing-protocol-method", sf.rel, cls.lineno,
+                    f"{name} does not define {PROTOCOL_CLASS}.{mname}()"))
+                continue
+            if _wildcard(iargs):
+                continue
+            ppos, ipos = _positional(pargs), _positional(iargs)
+            pdef, idef = _defaulted(pargs), _defaulted(iargs)
+            impl_line = next(
+                (n.lineno for n in ast.walk(cls)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name == mname), cls.lineno)
+            if ipos[:len(ppos)] != ppos:
+                violations.append(Violation(
+                    CHECKER, "signature-mismatch", sf.rel, impl_line,
+                    f"{name}.{mname}({', '.join(ipos)}) does not match the "
+                    f"protocol's positional parameters ({', '.join(ppos)})"))
+                continue
+            for extra in ipos[len(ppos):]:
+                if extra not in idef:
+                    violations.append(Violation(
+                        CHECKER, "signature-mismatch", sf.rel, impl_line,
+                        f"{name}.{mname}: extra required parameter "
+                        f"'{extra}' — protocol callers will never pass it"))
+            for d in sorted(pdef):
+                if d in ipos or d in {a.arg for a in iargs.kwonlyargs}:
+                    if d not in idef:
+                        violations.append(Violation(
+                            CHECKER, "signature-mismatch", sf.rel, impl_line,
+                            f"{name}.{mname}: parameter '{d}' is optional "
+                            "in the protocol but required here"))
+                else:
+                    violations.append(Violation(
+                        CHECKER, "signature-mismatch", sf.rel, impl_line,
+                        f"{name}.{mname}: protocol parameter '{d}' is not "
+                        "accepted"))
+        for attr in proto_attrs:
+            if not _assigns_attr(idx, name, attr):
+                violations.append(Violation(
+                    CHECKER, "missing-protocol-attr", sf.rel, cls.lineno,
+                    f"{name} never assigns protocol attribute "
+                    f"'self.{attr}'"))
+    return violations

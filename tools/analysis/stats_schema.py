@@ -1,0 +1,264 @@
+"""Stats-schema drift checker.
+
+The bench gates (tools/check_bench.py) and the paper-parity experiments
+compare engine wall-clock runs against the deterministic simulator, and the
+serving layer forwards a subset of the same counters.  Those comparisons are
+only meaningful while the three producers keep emitting the same keys — and
+docs/METRICS.md is the operator contract for all of them.  This checker
+extracts the produced key sets *statically* and cross-checks:
+
+1. **engine/simulator parity** — every key in ``PARITY_KEYS`` (the fields
+   check_bench invariants and the experiments join on) is produced by BOTH
+   `OffloadEngine.stats()` and `OffloadSimulator.run()`;
+2. **no silent divergence** — a new `StagingEngine.stats()` counter must
+   either be mirrored by the simulator or explicitly allowlisted in
+   ``STAGING_LOCAL_KEYS`` here (the allowlist is the reviewed record of
+   engine-only metrics);
+3. **docs coverage** — every produced public key appears backticked in
+   docs/METRICS.md, and every field named in a METRICS.md table's first
+   column is actually produced by something.
+
+Key extraction understands return-dict literals, ``s = {...}`` +
+``s.update(...)`` + ``s[k] = v`` flows, and resolves
+``self.<attr>.stats()`` merges through ``ATTR_STATS_SOURCES``.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.analysis.astutil import (CodeIndex, FuncInfo, SourceFile,
+                                    Violation, dict_literal_keys,
+                                    load_source, missing_file_violation)
+
+CHECKER = "stats-schema"
+
+ENGINE_FILE = "src/repro/core/engine.py"
+LOADER_FILE = "src/repro/core/loader.py"
+CACHE_FILE = "src/repro/core/cache.py"
+SIM_FILE = "src/repro/core/simulator.py"
+SERVER_FILE = "src/repro/serving/batching.py"
+KV_FILE = "src/repro/models/kv_pages.py"
+METRICS_DOC = "docs/METRICS.md"
+
+DEFAULT_FILES = (ENGINE_FILE, LOADER_FILE, CACHE_FILE, SIM_FILE,
+                 SERVER_FILE, KV_FILE)
+
+# fields the bench gates / experiments join the engine and simulator on
+PARITY_KEYS = {
+    "cache", "load_stall_s", "overlap_fraction", "per_stream_bytes",
+    "issue_reorders", "precision_downgrades", "upgrades", "upgrade_bytes",
+    "served_lo_expert_steps", "link_utilization",
+}
+# StagingEngine counters with no simulator analogue (reviewed allowlist:
+# extend it deliberately when adding an engine-only metric)
+STAGING_LOCAL_KEYS = {
+    "copy_s", "overlap_s", "prefetch_jobs", "dropped_prefetch", "streams",
+    "link_gbps",
+}
+# produced keys that hold nested objects rather than documented scalars
+DOC_EXEMPT = {"backend", "stats"}
+
+# how `s.update(self.<attr>.stats())` merges resolve: attr -> (file, class)
+ATTR_STATS_SOURCES = {
+    "kv_pool": (KV_FILE, "PagedKVPool"),
+    "scheduler": (LOADER_FILE, "StagingEngine"),
+    "cache": (CACHE_FILE, "MultidimensionalCache"),
+}
+
+_BACKTICK_RE = re.compile(r"`([^`]+)`")
+_FIELD_RE = re.compile(r"^[a-z][a-z0-9_]*(\.\*)?$")
+
+
+def _producer(idx: CodeIndex, cls: str, meth: str) -> Optional[FuncInfo]:
+    return idx.resolve_method(cls, meth)
+
+
+def extract_keys(idx: CodeIndex, info: FuncInfo,
+                 depth: int = 0) -> Set[str]:
+    """Statically collect the string keys `info` can return in its dict."""
+    if depth > 3:
+        return set()
+    keys: Set[str] = set()
+    var_keys: Dict[str, Set[str]] = {}
+
+    def value_keys(expr: ast.AST) -> Set[str]:
+        if isinstance(expr, ast.Dict):
+            out = set(dict_literal_keys(expr))
+            # {**other, "k": v} spreads: follow dict-literal spreads only
+            for k, v in zip(expr.keys, expr.values):
+                if k is None and isinstance(v, ast.Dict):
+                    out |= dict_literal_keys(v)
+            return out
+        if isinstance(expr, ast.Call):
+            fn = expr.func
+            # dict(expr) wrapper
+            if (isinstance(fn, ast.Name) and fn.id == "dict" and expr.args):
+                return value_keys(expr.args[0])
+            # self.<attr>.stats() merge
+            if (isinstance(fn, ast.Attribute) and fn.attr == "stats"
+                    and isinstance(fn.value, ast.Attribute)
+                    and fn.value.attr in ATTR_STATS_SOURCES):
+                _, cls = ATTR_STATS_SOURCES[fn.value.attr]
+                src = _producer(idx, cls, "stats")
+                if src is not None:
+                    return extract_keys(idx, src, depth + 1)
+            # self.cache.stats.to_dict() style
+            if (isinstance(fn, ast.Attribute) and fn.attr == "to_dict"):
+                src = None
+                for c in idx.classes:
+                    cand = idx.resolve_method(c, "to_dict")
+                    if cand is not None:
+                        src = cand
+                if src is not None:
+                    return extract_keys(idx, src, depth + 1)
+        if isinstance(expr, ast.Name):
+            return set(var_keys.get(expr.id, set()))
+        return set()
+
+    # two passes: ast.walk is breadth-first, so a trailing `return s` would
+    # otherwise be seen before the nested `s.update(...)` calls that feed it
+    for node in ast.walk(info.node):
+        if isinstance(node, ast.Assign):
+            ks = value_keys(node.value)
+            for t in node.targets:
+                if isinstance(t, ast.Name) and ks:
+                    var_keys.setdefault(t.id, set()).update(ks)
+                elif (isinstance(t, ast.Subscript)
+                      and isinstance(t.value, ast.Name)
+                      and isinstance(t.slice, ast.Constant)
+                      and isinstance(t.slice.value, str)):
+                    var_keys.setdefault(t.value.id, set()).add(t.slice.value)
+        elif (isinstance(node, ast.Call)
+              and isinstance(node.func, ast.Attribute)
+              and node.func.attr == "update"
+              and isinstance(node.func.value, ast.Name) and node.args):
+            var_keys.setdefault(node.func.value.id, set()).update(
+                value_keys(node.args[0]))
+    for node in ast.walk(info.node):
+        if isinstance(node, ast.Return) and node.value is not None:
+            keys |= value_keys(node.value)
+    return keys
+
+
+def _doc_tokens(text: str) -> Tuple[Set[str], Set[str]]:
+    """(all backticked field-like tokens, first-column table field tokens),
+    both with a trailing ``.*`` stripped."""
+    def norm(tok: str) -> Optional[str]:
+        tok = tok.strip()
+        if tok.endswith(".*"):
+            tok = tok[:-2]
+        return tok if _FIELD_RE.match(tok) else None
+
+    everywhere: Set[str] = set()
+    for tok in _BACKTICK_RE.findall(text):
+        n = norm(tok)
+        if n:
+            everywhere.add(n)
+    first_col: Set[str] = set()
+    for line in text.splitlines():
+        if not line.lstrip().startswith("|"):
+            continue
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if not cells or set(cells[0]) <= {"-", ":", " "}:
+            continue
+        m = _BACKTICK_RE.search(cells[0])
+        if m:
+            n = norm(m.group(1))
+            if n:
+                first_col.add(n)
+    return everywhere, first_col
+
+
+def run(root: pathlib.Path,
+        rel_files: Sequence[str] = DEFAULT_FILES) -> List[Violation]:
+    """Cross-check stats producers against each other and METRICS.md."""
+    violations: List[Violation] = []
+    files: List[SourceFile] = []
+    for rel in rel_files:
+        sf = load_source(root, rel)
+        if sf is None:
+            violations.append(missing_file_violation(CHECKER, rel))
+        else:
+            files.append(sf)
+    if not files:
+        return violations
+    idx = CodeIndex(files)
+
+    producers = {
+        "engine": ("OffloadEngine", "stats", ENGINE_FILE),
+        "staging": ("StagingEngine", "stats", LOADER_FILE),
+        "simulator": ("OffloadSimulator", "run", SIM_FILE),
+        "server": ("BatchingServer", "stats", SERVER_FILE),
+        "cache": ("CacheStats", "to_dict", CACHE_FILE),
+        "kv": ("PagedKVPool", "stats", KV_FILE),
+    }
+    loaded_rels = {sf.rel for sf in files}
+    keys: Dict[str, Set[str]] = {}
+    sites: Dict[str, Tuple[str, int]] = {}
+    for name, (cls, meth, rel) in producers.items():
+        if rel not in loaded_rels:
+            keys[name] = set()
+            continue
+        info = _producer(idx, cls, meth)
+        if info is None:
+            violations.append(Violation(
+                CHECKER, "config-drift", rel, 1,
+                f"stats producer {cls}.{meth} not found; update "
+                "tools/analysis/stats_schema.py if it was renamed"))
+            keys[name] = set()
+            continue
+        keys[name] = extract_keys(idx, info)
+        sites[name] = (rel, info.node.lineno)
+
+    engine_keys = keys["engine"]
+    sim_keys = keys["simulator"]
+    staging_keys = keys["staging"]
+
+    # 1. parity: the joined-on fields exist on both sides
+    for side, got in (("engine", engine_keys), ("simulator", sim_keys)):
+        if side not in sites:
+            continue
+        rel, line = sites[side]
+        for k in sorted(PARITY_KEYS - got):
+            violations.append(Violation(
+                CHECKER, "engine-sim-parity", rel, line,
+                f"parity key '{k}' is not produced by the {side} stats — "
+                "check_bench invariants and the experiments join on it"))
+
+    # 2. staging counters must be mirrored or deliberately allowlisted
+    if "staging" in sites and "simulator" in sites:
+        rel, line = sites["staging"]
+        for k in sorted(staging_keys - sim_keys - STAGING_LOCAL_KEYS):
+            violations.append(Violation(
+                CHECKER, "staging-sim-drift", rel, line,
+                f"StagingEngine.stats() key '{k}' has no simulator "
+                "counterpart; mirror it in OffloadSimulator.run() or add it "
+                "to STAGING_LOCAL_KEYS in tools/analysis/stats_schema.py"))
+
+    # 3. docs coverage both ways
+    doc = load_source(root, METRICS_DOC)
+    if doc is None:
+        violations.append(missing_file_violation(CHECKER, METRICS_DOC))
+        return violations
+    documented, table_fields = _doc_tokens(doc.text)
+    public = {}
+    for name in ("engine", "staging", "server", "cache", "kv"):
+        for k in keys[name]:
+            public.setdefault(k, name)
+    for k in sorted(set(public) - documented - DOC_EXEMPT):
+        rel, line = sites.get(public[k], (METRICS_DOC, 1))
+        violations.append(Violation(
+            CHECKER, "undocumented-stat", rel, line,
+            f"stats key '{k}' (produced by the {public[k]} stats) is not "
+            f"documented in {METRICS_DOC}"))
+    produced_all = set().union(*keys.values()) if keys else set()
+    for k in sorted(table_fields - produced_all):
+        violations.append(Violation(
+            CHECKER, "stale-doc-field", METRICS_DOC, 1,
+            f"{METRICS_DOC} documents field '{k}' that no stats producer "
+            "emits — stale docs or a renamed counter"))
+    return violations

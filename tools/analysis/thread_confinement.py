@@ -1,0 +1,251 @@
+"""Thread-confinement checker.
+
+The staging core (`core/loader.py` + `core/cache.py` + `core/engine.py`)
+runs background copy workers with zero locks; its correctness rests on the
+invariant stated in the `StagingEngine` docstring: **cache metadata (and the
+scheduler's queue state) is touched ONLY on the main thread** — executor
+threads stage bytes from read-only host storage and nothing else.
+
+This checker enforces that statically:
+
+1. every callable handed to a stream executor (``<pool>.submit(fn, ...)``)
+   or registered as a GC finalizer (``weakref.finalize(obj, fn, ...)``) is an
+   entry point into background-thread code;
+2. the call graph is walked from those entry points, following edges the AST
+   can prove — ``self.method``, bare module functions, and constructor-bound
+   callbacks (e.g. ``StagingEngine(loader, self._stage, self._commit_staged)``
+   binds ``stage_fn``/``commit_fn`` inside `OffloadEngine.__init__`);
+3. any reachable function that *calls* a method annotated
+   ``# owner: main-thread`` (the `MultidimensionalCache` mutators:
+   admit / pin / begin_inflight / cancel_inflight / ...), *writes* an
+   attribute so annotated (``self._pending``, ``self.downgraded``, the device
+   pools), or mutates such an attribute through a container method
+   (``.append`` / ``.add`` / ``.pop`` / ...) is a violation, reported with
+   the full call chain from the submit site.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from tools.analysis.astutil import (CodeIndex, FuncInfo, SourceFile,
+                                    Violation, attr_chain, load_source,
+                                    missing_file_violation, owner_annotations)
+
+CHECKER = "thread-confinement"
+
+DEFAULT_FILES = (
+    "src/repro/core/loader.py",
+    "src/repro/core/cache.py",
+    "src/repro/core/engine.py",
+)
+
+# container methods that mutate the receiver in place
+CONTAINER_MUTATORS = {
+    "add", "append", "appendleft", "clear", "discard", "extend", "insert",
+    "pop", "popleft", "remove", "setdefault", "update",
+}
+
+
+def _callback_bindings(idx: CodeIndex) -> Dict[Tuple[str, str], str]:
+    """Resolve constructor-injected callbacks to their definitions.
+
+    For every call site ``self.X = ClassName(a, b, ...)`` whose positional /
+    keyword args include ``self._meth``, match them against
+    ``ClassName.__init__``'s parameters and the ``self.attr = param``
+    assignments inside it.  Returns {(ClassName, attr_or_param): qualname}.
+    """
+    param_targets: Dict[Tuple[str, str], str] = {}
+    for info in idx.functions.values():
+        for call in ast.walk(info.node):
+            if not (isinstance(call, ast.Call)
+                    and isinstance(call.func, ast.Name)
+                    and call.func.id in idx.classes):
+                continue
+            cls = call.func.id
+            init = idx.resolve_method(cls, "__init__")
+            if init is None:
+                continue
+            params = [a.arg for a in init.node.args.args][1:]   # drop self
+            pairs = list(zip(params, call.args))
+            pairs += [(kw.arg, kw.value) for kw in call.keywords if kw.arg]
+            for pname, arg in pairs:
+                if (isinstance(arg, ast.Attribute)
+                        and isinstance(arg.value, ast.Name)
+                        and arg.value.id == "self" and info.cls):
+                    target = idx.resolve_method(info.cls, arg.attr)
+                    if target is not None:
+                        param_targets[(cls, pname)] = target.qualname
+    # propagate through `self.attr = param` in each __init__
+    bindings = dict(param_targets)
+    for cls in idx.classes:
+        init = idx.resolve_method(cls, "__init__")
+        if init is None:
+            continue
+        for node in ast.walk(init.node):
+            if not isinstance(node, ast.Assign):
+                continue
+            if not (isinstance(node.value, ast.Name)
+                    and (cls, node.value.id) in param_targets):
+                continue
+            for t in node.targets:
+                if (isinstance(t, ast.Attribute)
+                        and isinstance(t.value, ast.Name)
+                        and t.value.id == "self"):
+                    bindings[(cls, t.attr)] = param_targets[(cls,
+                                                             node.value.id)]
+    return bindings
+
+
+def _resolve_callable(idx: CodeIndex, info: FuncInfo,
+                      node: ast.AST) -> Optional[FuncInfo]:
+    """Resolve a callable *expression* (submit arg or call target)."""
+    if isinstance(node, ast.Name):
+        return idx.module_functions.get(node.id)
+    if isinstance(node, ast.Attribute) and isinstance(node.value, ast.Name):
+        if node.value.id == "self":
+            return idx.resolve_method(info.cls, node.attr)
+        if node.value.id in idx.classes:            # Class.staticmethod
+            return idx.resolve_method(node.value.id, node.attr)
+    return None
+
+
+def _find_entries(idx: CodeIndex) -> List[Tuple[FuncInfo, FuncInfo, int]]:
+    """(entry_fn, submitting_fn, submit_lineno) for every executor submit /
+    finalizer registration whose callable resolves."""
+    entries = []
+    for info in idx.functions.values():
+        for call in ast.walk(info.node):
+            if not isinstance(call, ast.Call):
+                continue
+            target_arg = None
+            if (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "submit" and call.args):
+                target_arg = call.args[0]
+            elif (isinstance(call.func, ast.Attribute)
+                    and call.func.attr == "finalize"
+                    and attr_chain(call.func)[:1] == ["weakref"]
+                    and len(call.args) >= 2):
+                target_arg = call.args[1]
+            if target_arg is None:
+                continue
+            entry = _resolve_callable(idx, info, target_arg)
+            if entry is not None:
+                entries.append((entry, info, call.lineno))
+    return entries
+
+
+def _chain(parents: Dict[str, str], qualname: str) -> str:
+    parts = [qualname]
+    while qualname in parents:
+        qualname = parents[qualname]
+        parts.append(qualname)
+    return " -> ".join(reversed(parts))
+
+
+def run(root: pathlib.Path,
+        rel_files: Sequence[str] = DEFAULT_FILES) -> List[Violation]:
+    """Check thread confinement over ``root``-relative ``rel_files``."""
+    violations: List[Violation] = []
+    files: List[SourceFile] = []
+    for rel in rel_files:
+        sf = load_source(root, rel)
+        if sf is None:
+            violations.append(missing_file_violation(CHECKER, rel))
+        else:
+            files.append(sf)
+    if not files:
+        return violations
+
+    idx = CodeIndex(files)
+    owned_methods, owned_attrs = owner_annotations(files)
+    bindings = _callback_bindings(idx)
+    entries = _find_entries(idx)
+
+    # BFS over the provable call graph from background entry points
+    parents: Dict[str, str] = {}
+    queue: List[FuncInfo] = []
+    seen = set()
+    for entry, submitter, lineno in entries:
+        if entry.qualname not in seen:
+            seen.add(entry.qualname)
+            parents[entry.qualname] = (f"{submitter.qualname} "
+                                       f"(submit at {submitter.sf.rel}:"
+                                       f"{lineno})")
+            queue.append(entry)
+
+    reachable: List[FuncInfo] = []
+    while queue:
+        info = queue.pop(0)
+        reachable.append(info)
+        for call in ast.walk(info.node):
+            if not isinstance(call, ast.Call):
+                continue
+            target: Optional[FuncInfo] = None
+            fn = call.func
+            if (isinstance(fn, ast.Attribute)
+                    and isinstance(fn.value, ast.Name)
+                    and fn.value.id == "self"):
+                target = idx.resolve_method(info.cls, fn.attr)
+                if target is None and info.cls:
+                    bound = bindings.get((info.cls, fn.attr))
+                    if bound is not None:
+                        target = idx.functions.get(bound)
+            elif isinstance(fn, ast.Name):
+                target = idx.module_functions.get(fn.id)
+            if target is not None and target.qualname not in seen:
+                seen.add(target.qualname)
+                parents[target.qualname] = info.qualname
+                queue.append(target)
+
+    # scan everything reachable from a background thread
+    for info in reachable:
+        chain = _chain(parents, info.qualname)
+        for node in ast.walk(info.node):
+            if isinstance(node, ast.Call):
+                name = (node.func.attr if isinstance(node.func, ast.Attribute)
+                        else node.func.id if isinstance(node.func, ast.Name)
+                        else None)
+                if name in owned_methods:
+                    dfile, dline = owned_methods[name]
+                    violations.append(Violation(
+                        CHECKER, "main-thread-owned-call", info.sf.rel,
+                        node.lineno,
+                        f"executor-submitted code calls '{name}' "
+                        f"(# owner: main-thread at {dfile}:{dline}); "
+                        f"path: {chain}"))
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr in CONTAINER_MUTATORS):
+                    recv = attr_chain(node.func.value)
+                    hit = next((a for a in recv[1:] if a in owned_attrs),
+                               None)
+                    if recv[:1] == ["self"] and hit:
+                        dfile, dline = owned_attrs[hit]
+                        violations.append(Violation(
+                            CHECKER, "main-thread-owned-mutation",
+                            info.sf.rel, node.lineno,
+                            f"executor-submitted code mutates 'self.{hit}' "
+                            f"via .{node.func.attr}() (# owner: main-thread "
+                            f"at {dfile}:{dline}); path: {chain}"))
+            elif isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                targets = (node.targets if isinstance(node, ast.Assign)
+                           else [node.target])
+                for t in targets:
+                    while isinstance(t, ast.Subscript):
+                        t = t.value
+                    names = attr_chain(t)
+                    if names[:1] != ["self"]:
+                        continue
+                    hit = next((a for a in names[1:] if a in owned_attrs),
+                               None)
+                    if hit:
+                        dfile, dline = owned_attrs[hit]
+                        violations.append(Violation(
+                            CHECKER, "main-thread-owned-write", info.sf.rel,
+                            node.lineno,
+                            f"executor-submitted code writes 'self.{hit}' "
+                            f"(# owner: main-thread at {dfile}:{dline}); "
+                            f"path: {chain}"))
+    return violations
