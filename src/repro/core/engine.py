@@ -398,9 +398,12 @@ class OffloadEngine:
         dequant-GEMM over the gathered lo-pool slots.  Index arrays have
         fixed length P = batch * top_k (padded entries carry row == batch,
         which the gather clips and the scatter drops), so each batch size
-        compiles exactly once.  Per-pair outputs land in a (B, K, D) grid at
+        compiles exactly once.  Hi-pair outputs land in a (B, K, D) grid at
         unique (row, rank) cells — combine order is fixed by the rank axis,
-        keeping per-slot numerics independent of neighbouring slots.
+        keeping per-slot numerics independent of neighbouring slots; the lo
+        half fuses GEMM + gated combine in `kops.grouped_dequant_combine`
+        (pair rows are emitted non-decreasing by the builder below, the
+        kernel's scatter contract).
 
         The ovf_* buffers carry union-overflow experts (cache smaller than
         the layer's union demand at batch > 1): they are appended after the
@@ -424,18 +427,20 @@ class OffloadEngine:
         zl = kops.grouped_dequant_matmul(
             xl, all_lo[0][lo_slot], all_lo[1][lo_slot],
             bits=ecfg.lo_bits, group_size=ecfg.group_size).astype(hs.dtype)
-        out_lo = kops.grouped_dequant_matmul(
+        # second lo GEMM fused with the gated per-row combine: pad pairs
+        # (row == b) carry weight 0 and are dropped in-kernel
+        lo_w_pair = jnp.where(
+            lo_rows < b, w_lo[jnp.clip(lo_rows, 0, b - 1), lo_ranks], 0.0)
+        y_lo = kops.grouped_dequant_combine(
             self._activate(zl), all_lo[2][lo_slot], all_lo[3][lo_slot],
-            bits=ecfg.lo_bits, group_size=ecfg.group_size)
-        # ---- segment combine (unique (row, rank) cells; OOB pads dropped) --
+            lo_rows, lo_w_pair, bits=ecfg.lo_bits,
+            group_size=ecfg.group_size, num_rows=b)         # (B, D) f32
+        # ---- hi combine (unique (row, rank) cells; OOB pads dropped) ----
         grid = jnp.zeros((b, k, d), jnp.float32)
         grid = grid.at[hi_rows, hi_ranks].set(out_hi.astype(jnp.float32),
                                               mode="drop")
-        grid = grid.at[lo_rows, lo_ranks].set(out_lo.astype(jnp.float32),
-                                              mode="drop")
-        w = w_hi + w_lo                                     # (B, K), disjoint
-        y = (grid * w[..., None]).sum(axis=1)
-        wsum = w.sum(axis=1)[:, None]
+        y = (grid * w_hi[..., None]).sum(axis=1) + y_lo
+        wsum = (w_hi + w_lo).sum(axis=1)[:, None]           # disjoint weights
         y = jnp.where(wsum > 0, y / jnp.where(wsum > 0, wsum, 1.0), 0.0)
         return y[:, None, :]                                # (B, 1, D)
 
@@ -726,7 +731,10 @@ class OffloadEngine:
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
 
         ffn_in = self._jit("ffn_in", self._ffn_input)
-        gate_fn = self._jit("gate", lambda h2, w: h2 @ w)
+        # fused router: stacked matmul + softmax + top-k in one dispatch
+        # (kernels/ops.gating_topk; ref path on CPU, pallas on TPU)
+        gate_fn = self._jit(
+            "gate", lambda h2, w: kops.gating_topk(h2, w[None], top_k=k))
         grouped_ffn = self._jit("grouped_ffn", self._grouped_ffn)
         combine_fn = self._jit("residual_add",
                                lambda xx, yy: xx + yy.astype(xx.dtype))
@@ -750,17 +758,15 @@ class OffloadEngine:
             # (forcing h above keeps the pending attn/ffn-in compute out of
             # the gating timer)
             tg0 = time.perf_counter()
-            logits_all = np.asarray(gate_fn(h[:, 0], self.routers_dev[mi]),
-                                    np.float32)                # (B,E)
-            z = logits_all - logits_all.max(axis=-1, keepdims=True)
-            probs = np.exp(z)
-            probs /= probs.sum(axis=-1, keepdims=True)
+            _, vals_g, idx_g = gate_fn(h[:, 0], self.routers_dev[mi])
+            vals_np = np.asarray(vals_g[0], np.float32)        # (B,K)
+            idx_np = np.asarray(idx_g[0], np.int32)            # (B,K)
             self._gating_s += time.perf_counter() - tg0
             tops: Dict[int, np.ndarray] = {}
             gates: Dict[int, np.ndarray] = {}
             for r in rows:
-                tops[r] = np.argsort(-probs[r])[:k]
-                gates[r] = probs[r][tops[r]]
+                tops[r] = idx_np[r]
+                gates[r] = vals_np[r]
 
             self._score_pending_preds(mi, tops)
 
@@ -1097,6 +1103,11 @@ class OffloadEngine:
             "gating_s": self._gating_s,
             "expert_dispatches": self._expert_dispatches,
             "union_reloads": self._union_reloads,
+            # which kernel implementation each hot-path op dispatched/traced
+            # ("<op>.<xla|pallas|pallas_interpret>" -> count): a TPU run
+            # showing only .xla counts is silently benchmarking the einsum
+            # oracle path
+            "kernel_dispatch": kops.dispatch_counts(),
             # KV page-pool pressure (zeros under the dense KV layout)
             "kv_pages_used": 0, "kv_pages_total": 0, "kv_page_fraction": 0.0,
         }

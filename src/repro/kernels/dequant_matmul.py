@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.quant.quantize import PACK_FACTOR
 
@@ -98,3 +99,131 @@ def dequant_matmul_pallas(x, data, scale, *, bits: int, group_size: int,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         interpret=interpret,
     )(x, data, scale)
+
+
+def _dequant_tile(data_ref, scale_ref, *, bits: int, group_size: int):
+    """Expand one (1, bk//pack, N) packed tile to (bk, N) f32 in VREGs."""
+    codes = _unpack_block(data_ref[0], bits)                 # (bk, bn)
+    scales = scale_ref[0]                                    # (bk//G, bn)
+    bk, bn = codes.shape
+    groups = bk // group_size
+    w = codes.reshape(groups, group_size, bn) * scales.reshape(groups, 1, bn)
+    return w.reshape(bk, bn)
+
+
+def _grouped_dequant_kernel(x_ref, data_ref, scale_ref, o_ref, *, bits: int,
+                            group_size: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(data_ref, scale_ref, bits=bits, group_size=group_size)
+    x = x_ref[...].astype(jnp.float32)                       # (1, bk)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "group_size", "block_k", "interpret"))
+def grouped_dequant_matmul_pallas(x, data, scale, *, bits: int,
+                                  group_size: int, block_k: int = 512,
+                                  interpret: bool = False):
+    """y[p] = x[p] @ dequant(data[p], scale[p]) — the whole (P, K) pair
+    batch in ONE kernel launch, grid (P, K/bk), out-row accumulation over
+    the k axis.  x: (P,K); data: (P,K//pack,N); scale: (P,K//group,N)."""
+    p_, k = x.shape
+    _, kp, n = data.shape
+    pack = PACK_FACTOR[bits]
+    assert kp * pack == k, (kp, pack, k)
+    assert block_k % group_size == 0 and block_k % pack == 0
+    assert k % block_k == 0, (k, block_k)
+    k_steps = k // block_k
+
+    kernel = functools.partial(_grouped_dequant_kernel, bits=bits,
+                               group_size=group_size)
+    return pl.pallas_call(
+        kernel,
+        grid=(p_, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_k), lambda ip, kk: (ip, kk)),
+            pl.BlockSpec((1, block_k // pack, n), lambda ip, kk: (ip, kk, 0)),
+            pl.BlockSpec((1, block_k // group_size, n),
+                         lambda ip, kk: (ip, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda ip, kk: (ip, 0)),
+        out_shape=jax.ShapeDtypeStruct((p_, n), jnp.float32),
+        interpret=interpret,
+    )(x, data, scale)
+
+
+def _grouped_dequant_combine_kernel(rows_ref, x_ref, data_ref, scale_ref,
+                                    w_ref, o_ref, *, bits: int,
+                                    group_size: int):
+    ip = pl.program_id(0)
+    kk = pl.program_id(1)
+    # the output block index is rows_ref[ip]: consecutive pairs hitting the
+    # same row revisit the block, so initialize only on the first visit
+    first = (ip == 0) | (rows_ref[ip] != rows_ref[jnp.maximum(ip - 1, 0)])
+
+    @pl.when(first & (kk == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(data_ref, scale_ref, bits=bits, group_size=group_size)
+    x = x_ref[...].astype(jnp.float32)                       # (1, bk)
+    o_ref[...] += w_ref[0, 0] * jnp.dot(x, w,
+                                        preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "group_size", "num_rows", "block_k", "interpret"))
+def grouped_dequant_combine_pallas(x, data, scale, rows, weights, *,
+                                   bits: int, group_size: int, num_rows: int,
+                                   block_k: int = 512,
+                                   interpret: bool = False):
+    """Fused grouped dequant-GEMM + gated combine: out[rows[p]] +=
+    weights[p] * (x[p] @ dequant(data[p], scale[p])), in one kernel launch.
+
+    The combine-scatter happens through a data-dependent OUTPUT index map
+    (out block index = rows[p], a scalar-prefetch operand): pairs of the
+    same token row land in the same VMEM-resident output block and
+    accumulate in place.  `rows` MUST therefore be sorted non-decreasing
+    (the engine's pair builder emits them that way); pad pairs carry
+    row == num_rows, are clipped into range for the index map, and are
+    neutralized by weight 0 — the wrapper zeroes rows no real pair visited
+    (their pool buffers are never initialized by the kernel)."""
+    p_, k = x.shape
+    _, kp, n = data.shape
+    pack = PACK_FACTOR[bits]
+    assert kp * pack == k, (kp, pack, k)
+    assert block_k % group_size == 0 and block_k % pack == 0
+    assert k % block_k == 0, (k, block_k)
+    assert rows.shape == (p_,) and weights.shape == (p_,)
+    k_steps = k // block_k
+
+    rows_clip = jnp.clip(rows, 0, num_rows - 1).astype(jnp.int32)
+    wcol = weights.reshape(p_, 1).astype(jnp.float32)
+    kernel = functools.partial(_grouped_dequant_combine_kernel, bits=bits,
+                               group_size=group_size)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(p_, k_steps),
+            in_specs=[
+                pl.BlockSpec((1, block_k), lambda ip, kk, rr: (ip, kk)),
+                pl.BlockSpec((1, block_k // pack, n),
+                             lambda ip, kk, rr: (ip, kk, 0)),
+                pl.BlockSpec((1, block_k // group_size, n),
+                             lambda ip, kk, rr: (ip, kk, 0)),
+                pl.BlockSpec((1, 1), lambda ip, kk, rr: (ip, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n), lambda ip, kk, rr: (rr[ip], 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_rows, n), jnp.float32),
+        interpret=interpret,
+    )(rows_clip, x, data, scale, wcol)
+    hit = jnp.zeros((num_rows,), jnp.float32).at[rows].add(1.0, mode="drop")
+    return jnp.where(hit[:, None] > 0, out, 0.0)

@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 
@@ -92,4 +93,101 @@ def flash_decode_pallas(q, k, v, lengths, *, block_s: int = 256,
         ],
         interpret=interpret,
     )(q, k, v, lengths2)
+    return o / jnp.maximum(l, 1e-30)
+
+
+def _paged_flash_decode_kernel(table_ref, len_ref, q_ref, k_ref, v_ref,
+                               o_ref, m_ref, l_ref, *, page_size: int,
+                               scale: float, softcap: float):
+    bb = pl.program_id(0)
+    pp = pl.program_id(2)
+
+    @pl.when(pp == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)               # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)            # (psz, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)            # (psz, hd)
+    length = len_ref[bb]
+
+    logits = (k @ q) * scale                              # (psz,)
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    # token t of a slot lives at LOGICAL page t // psz: mask by the logical
+    # page index pp, not the physical page the table maps it to
+    pos = pp * page_size + jax.lax.iota(jnp.int32, page_size)
+    logits = jnp.where(pos < length, logits, NEG_INF)
+
+    m_old = m_ref[0, 0, 0]
+    m_new = jnp.maximum(m_old, jnp.max(logits))
+    p = jnp.exp(logits - m_new)
+    # explicit re-mask: when EVERY position seen so far is invalid (length
+    # 0), m_new == NEG_INF and exp(NEG_INF - NEG_INF) would turn the mask
+    # into uniform weights; zeroed p keeps l at 0 so the wrapper returns 0
+    p = jnp.where(pos < length, p, 0.0)
+    corr = jnp.exp(m_old - m_new)
+    l_ref[0, 0, 0] = l_ref[0, 0, 0] * corr + jnp.sum(p)
+    o_ref[0, 0, :] = o_ref[0, 0, :] * corr + p @ v
+    m_ref[0, 0, 0] = m_new
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "scale", "softcap"))
+def paged_flash_decode_pallas(q, pages_k, pages_v, table, lengths, *,
+                              interpret: bool = False,
+                              scale: float | None = None,
+                              softcap: float = 0.0):
+    """Flash decode straight out of a paged KV pool: the page table rides in
+    as a scalar-prefetch operand and drives the K/V block index maps, so each
+    grid step DMAs exactly one physical (psz, hd) page — the dense
+    (B, maxp*psz) gathered cache view is never materialized.
+
+        q        (B, Hq, hd)           current-token queries
+        pages_k  (P, psz, Hkv, hd)     shared page pool (pages_v alike)
+        table    (B, maxp) int         physical page id per logical page
+        lengths  (B,) int              #valid cache tokens per slot
+
+    GQA is handled in the index map (query head hh reads kv head hh // g) —
+    no repeated K/V is ever built.  Returns (B, Hq, hd) f32; rows with
+    length 0 return exact zeros."""
+    b, hq, hd = q.shape
+    num_pages, psz, hkv, hd2 = pages_k.shape
+    assert hd2 == hd and pages_v.shape == pages_k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    g = hq // hkv
+    maxp = table.shape[1]
+    assert table.shape == (b, maxp)
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+
+    kernel = functools.partial(_paged_flash_decode_kernel, page_size=psz,
+                               scale=scale, softcap=softcap)
+    kv_spec = pl.BlockSpec(
+        (1, psz, 1, hd), lambda bb, hh, pp, tab, ln: (tab[bb, pp], 0, hh // g, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, maxp),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bb, hh, pp, tab, ln: (bb, hh, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, hd), lambda bb, hh, pp, tab, ln: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, pp, tab, ln: (bb, hh, 0)),
+            pl.BlockSpec((1, 1, 1), lambda bb, hh, pp, tab, ln: (bb, hh, 0)),
+        ],
+    )
+    o, m, l = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table.astype(jnp.int32), lengths.astype(jnp.int32), q, pages_k, pages_v)
     return o / jnp.maximum(l, 1e-30)

@@ -33,3 +33,56 @@ def flash_decode_ref(q, k, v, lengths, scale=None):
     logits = jnp.where(mask, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32))
+
+
+def paged_flash_decode_ref(q, pages_k, pages_v, table, lengths, *,
+                           scale=None, softcap: float = 0.0):
+    """Paged decode-attention oracle: gather the slot-contiguous logical K/V
+    view through the page table, then masked softmax (GQA heads expanded).
+    q: (B,Hq,hd); pages_k/v: (P,psz,Hkv,hd); table: (B,maxp); lengths: (B,).
+    Rows with length 0 return exact zeros (the fused kernel's contract)."""
+    b, hq, hd = q.shape
+    _, psz, hkv, _ = pages_k.shape
+    maxp = table.shape[1]
+    kg = pages_k[table].reshape(b, maxp * psz, hkv, hd)
+    vg = pages_v[table].reshape(b, maxp * psz, hkv, hd)
+    if hkv != hq:
+        g = hq // hkv
+        kg = jnp.repeat(kg, g, axis=2)
+        vg = jnp.repeat(vg, g, axis=2)
+    scale = scale if scale is not None else 1.0 / (hd ** 0.5)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                        kg.astype(jnp.float32)) * scale
+    if softcap and softcap > 0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    mask = jnp.arange(maxp * psz)[None, None, :] < lengths.reshape(-1, 1, 1)
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", w, vg.astype(jnp.float32))
+    return jnp.where((lengths > 0).reshape(-1, 1, 1), out, 0.0)
+
+
+def grouped_dequant_combine_ref(x, data, scale, rows, weights, *, bits: int,
+                                group_size: int, num_rows: int):
+    """Fused grouped dequant-GEMM + gated combine oracle: per-pair GEMM via
+    dense dequantize + einsum, then a weighted scatter-add into the per-row
+    output.  Pad pairs carry row == num_rows and are dropped by the scatter.
+    x: (P,K); data: (P,K//pack,N); scale: (P,K//group,N); rows/weights: (P,)."""
+    q = QTensor(data, scale, bits, group_size, x.shape[-1])
+    w = dequantize(q, dtype=jnp.float32)                    # (P, K, N)
+    y = jnp.einsum("pk,pkn->pn", x.astype(jnp.float32), w,
+                   preferred_element_type=jnp.float32)
+    out = jnp.zeros((num_rows, y.shape[-1]), jnp.float32)
+    return out.at[rows].add(weights.astype(jnp.float32)[:, None] * y,
+                            mode="drop")
+
+
+def gating_topk_ref(x, gates, *, top_k: int):
+    """Fused gating oracle: stacked router matmul + softmax + top-k.
+    Returns (logits (P,B,E) f32, vals (P,B,K) f32, idx (P,B,K) i32); ties
+    resolve to the lowest expert index, matching the kernel's iterative
+    argmax."""
+    logits = stacked_gating_ref(x, gates)
+    probs = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(probs, top_k)
+    return logits, vals, idx.astype(jnp.int32)

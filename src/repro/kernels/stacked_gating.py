@@ -13,7 +13,9 @@ Kernel contract:
 
 Grid over P: one gate layer per grid step; each step is a (B,D)x(D,E) tile
 matmul held fully in VMEM (B and E are small at decode time; D is blocked).
-Top-k selection happens outside the kernel (jnp.top_k on (P, B, E)).
+`stacked_gating_pallas` emits logits only (top-k outside, predictor path);
+`gating_topk_pallas` additionally runs softmax + iterative top-k selection
+in the final k-step — the serving hot path's fused gating op.
 """
 
 from __future__ import annotations
@@ -57,5 +59,73 @@ def stacked_gating_pallas(x, gates, *, block_d: int = 512, interpret: bool = Fal
         ],
         out_specs=pl.BlockSpec((1, b, e), lambda ip, kk: (ip, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((p, b, e), jnp.float32),
+        interpret=interpret,
+    )(x, gates)
+
+
+def _gating_topk_kernel(x_ref, g_ref, l_ref, v_ref, i_ref, *, k_steps: int,
+                        top_k: int):
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (B, bd)
+    g = g_ref[0].astype(jnp.float32)            # (bd, E)
+    l_ref[0] += jnp.dot(x, g, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == k_steps - 1)
+    def _select():
+        logits = l_ref[0]                       # (B, E) fully accumulated
+        z = logits - jnp.max(logits, axis=-1, keepdims=True)
+        ez = jnp.exp(z)
+        probs = ez / jnp.sum(ez, axis=-1, keepdims=True)
+        work = probs
+        for j in range(top_k):                  # static unroll; ties -> lowest idx
+            idx = jnp.argmax(work, axis=-1).astype(jnp.int32)       # (B,)
+            v_ref[0, :, j] = jnp.max(work, axis=-1)
+            i_ref[0, :, j] = idx
+            sel = jax.lax.broadcasted_iota(jnp.int32, work.shape, 1) \
+                == idx[:, None]
+            work = jnp.where(sel, -1.0, work)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("top_k", "block_d", "interpret"))
+def gating_topk_pallas(x, gates, *, top_k: int, block_d: int = 512,
+                       interpret: bool = False):
+    """Batched router matmul + softmax + top-k in one pass: the D axis is
+    accumulated into the logits block across k-steps, and the final k-step
+    runs softmax + iterative top-k selection on the VMEM-resident block
+    before it flushes.  Returns (logits (P,B,E) f32, vals (P,B,K) f32 softmax
+    probabilities of the selected experts, idx (P,B,K) i32)."""
+    b, d = x.shape
+    p, dg, e = gates.shape
+    assert dg == d
+    assert 0 < top_k <= e, (top_k, e)
+    block_d = min(block_d, d)
+    assert d % block_d == 0
+    k_steps = d // block_d
+
+    kernel = functools.partial(_gating_topk_kernel, k_steps=k_steps,
+                               top_k=top_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(p, k_steps),
+        in_specs=[
+            pl.BlockSpec((b, block_d), lambda ip, kk: (0, kk)),
+            pl.BlockSpec((1, block_d, e), lambda ip, kk: (ip, kk, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, e), lambda ip, kk: (ip, 0, 0)),
+            pl.BlockSpec((1, b, top_k), lambda ip, kk: (ip, 0, 0)),
+            pl.BlockSpec((1, b, top_k), lambda ip, kk: (ip, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((p, b, e), jnp.float32),
+            jax.ShapeDtypeStruct((p, b, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((p, b, top_k), jnp.int32),
+        ],
         interpret=interpret,
     )(x, gates)

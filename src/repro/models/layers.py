@@ -344,7 +344,14 @@ def paged_attn_decode(p, x, k_pages, v_pages, table, positions, active,
     table: (B, maxp) page table; positions: (B,) write index; active: (B,)
     bool — inactive slots' writes are DROPPED (their table rows may point at
     pages now owned by another slot, so a junk write would corrupt a
-    neighbour).  Returns (out (B,1,Hq*hd @ wo), new_k_pages, new_v_pages)."""
+    neighbour).  Returns (out (B,1,Hq*hd @ wo), new_k_pages, new_v_pages).
+
+    Attention runs through `kops.paged_flash_decode`: the page table drives
+    the kernel's K/V index maps, so no (B, maxp*psz) dense gathered cache
+    view is ever materialized (`_paged_gather` remains the prefill/oracle
+    path only).  Every slot attends over tokens [0, position] — inactive
+    slots attend over junk exactly as the gathered path did; their outputs
+    are garbage the caller masks out."""
     b = x.shape[0]
     hq, hd = cfg.num_heads, cfg.resolved_head_dim
     q, k, v = _paged_qkv(p, x, cfg, positions[:, None])
@@ -356,11 +363,10 @@ def paged_attn_decode(p, x, k_pages, v_pages, table, positions, active,
                                         mode="drop")
     v_pages = v_pages.at[page, off].set(v[:, 0].astype(v_pages.dtype),
                                         mode="drop")
-    kg = _paged_gather(k_pages, table)
-    vg = _paged_gather(v_pages, table)
-    idx = jnp.arange(kg.shape[1], dtype=jnp.int32)[None, :]
-    mask = (idx <= positions[:, None])[:, None, :]        # (B, 1, Smax)
-    out = mha(q, kg, vg, mask, cfg.attn_logit_softcap, 1.0 / np.sqrt(hd))
+    out = kops.paged_flash_decode(q[:, 0], k_pages, v_pages, table,
+                                  positions + 1, scale=1.0 / np.sqrt(hd),
+                                  softcap=cfg.attn_logit_softcap)
+    out = out.astype(q.dtype)
     return out.reshape(b, 1, hq * hd) @ p["wo"], k_pages, v_pages
 
 

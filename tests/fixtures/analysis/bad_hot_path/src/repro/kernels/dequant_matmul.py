@@ -1,0 +1,9 @@
+"""Fixture: clean grouped dequant kernel wrappers (entry-point presence)."""
+
+
+def grouped_dequant_matmul_pallas(x, data, scale):
+    return x
+
+
+def grouped_dequant_combine_pallas(x, data, scale, rows, weights):
+    return x

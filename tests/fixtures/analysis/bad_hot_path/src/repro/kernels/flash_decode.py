@@ -1,0 +1,5 @@
+"""Fixture: clean paged flash-decode wrapper (entry-point presence only)."""
+
+
+def paged_flash_decode_pallas(q, pages_k, pages_v, table, lengths):
+    return q

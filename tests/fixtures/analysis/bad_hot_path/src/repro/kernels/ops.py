@@ -1,0 +1,5 @@
+"""Fixture: clean kernel-tier dispatch wrapper (no syncs, nothing jitted)."""
+
+
+def paged_flash_decode(q, pages_k, pages_v, table, lengths):
+    return q

@@ -1,0 +1,5 @@
+"""Fixture: jnp reference oracles placeholder (no jit roots, no syncs)."""
+
+
+def paged_flash_decode_ref(q, pages_k, pages_v, table, lengths):
+    return q

@@ -1,0 +1,5 @@
+"""Fixture: clean fused gating top-k wrapper (entry-point presence only)."""
+
+
+def gating_topk_pallas(x, gates):
+    return x

@@ -81,6 +81,25 @@ def test_engine_decode_steady_state_zero_recompiles(setup, name):
         be.close()
 
 
+def test_kernel_tier_decode_steady_state_zero_recompiles(setup, monkeypatch):
+    """Grouped + paged decode with Pallas dispatch active (REPRO_KERNEL_MODE
+    =pallas, interpret on CPU): the kernel tier's tiling/padding choices and
+    scalar-prefetch operands (page table, combine rows) must not
+    reintroduce per-step recompiles."""
+    monkeypatch.setenv("REPRO_KERNEL_MODE", "pallas")
+    m, params = setup
+    eng = OffloadEngine(m, params, EngineConfig(
+        hi_slots=8, lo_slots=4, grouped=True, paged_kv=True, kv_page_size=4,
+        kv_pages=32))
+    be = HobbitBackend(eng)
+    try:
+        before, after = _drive(be, lambda: dict(eng._jit_cache))
+        assert before and any(v > 0 for v in before.values())
+        assert_no_recompiles(before, after)
+    finally:
+        be.close()
+
+
 def test_paged_dense_decode_steady_state_zero_recompiles(setup):
     m, params = setup
     be = DenseBackend(m, params, paged=True, page_size=4, kv_pages=32,

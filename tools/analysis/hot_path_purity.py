@@ -45,14 +45,29 @@ DEFAULT_FILES = (
     "src/repro/models/layers.py",
     "src/repro/models/kv_pages.py",
     "src/repro/quant/quantize.py",
+    # kernel tier: dispatch wrappers + pallas_call wrappers (jit roots via
+    # @functools.partial(jax.jit, ...)) + the jnp ref oracles they fall
+    # back to — all traced into the decode hot path
+    "src/repro/kernels/ops.py",
+    "src/repro/kernels/flash_decode.py",
+    "src/repro/kernels/dequant_matmul.py",
+    "src/repro/kernels/stacked_gating.py",
+    "src/repro/kernels/ref.py",
 )
 
 # decode-path entry points that must exist (config-drift guard: a rename
-# must not silently empty this checker)
+# must not silently empty this checker); cls None = module-level function
 REQUIRED_ENTRY_POINTS = (
     ("src/repro/models/model.py", "Model", "decode_step"),
     ("src/repro/models/model.py", "Model", "decode_step_paged"),
     ("src/repro/models/model.py", "Model", "prefill_chunk_paged"),
+    ("src/repro/kernels/flash_decode.py", None, "paged_flash_decode_pallas"),
+    ("src/repro/kernels/dequant_matmul.py", None,
+     "grouped_dequant_combine_pallas"),
+    ("src/repro/kernels/dequant_matmul.py", None,
+     "grouped_dequant_matmul_pallas"),
+    ("src/repro/kernels/stacked_gating.py", None, "gating_topk_pallas"),
+    ("src/repro/kernels/ops.py", None, "paged_flash_decode"),
 )
 
 # method calls that synchronize device -> host
@@ -317,10 +332,16 @@ def run(root: pathlib.Path,
     for rel, cls, meth in REQUIRED_ENTRY_POINTS:
         if rel not in loaded_rels:
             continue        # already reported missing above
-        if idx.resolve_method(cls, meth) is None:
+        if cls is None:
+            info = idx.module_functions.get(meth)
+            found = info is not None and info.sf.rel == rel
+        else:
+            found = idx.resolve_method(cls, meth) is not None
+        if not found:
+            qual = meth if cls is None else f"{cls}.{meth}"
             violations.append(Violation(
                 CHECKER, "config-drift", rel, 1,
-                f"hot-path entry point {cls}.{meth} not found; update "
+                f"hot-path entry point {qual} not found; update "
                 "tools/analysis/hot_path_purity.py if it was renamed"))
 
     regions, extra = _find_regions(idx)

@@ -1,7 +1,8 @@
 """Benchmark-regression CI gate (run from the repo root)::
 
     python -m benchmarks.decode_speedup --smoke --json results/bench_ci.json
-    python tools/check_bench.py results/bench_ci.json \
+    python -m benchmarks.kernel_bench --smoke --json results/kernel_ci.json
+    python tools/check_bench.py results/bench_ci.json results/kernel_ci.json \
         --baseline benchmarks/baseline.json
 
 Compares the smoke benchmark's JSON output against the checked-in
@@ -26,7 +27,12 @@ win rots:
   ``sim_upgrade_stall_ratio`` <= 1.05 (upgrades ride only idle link time:
   stall with upgrades on stays within 5% of upgrades off — gated on the
   simulator timeline because wall-clock stall swings 20-40% with runner
-  load, exactly the noise the contended stall slack exists for).
+  load, exactly the noise the contended stall slack exists for), and the
+  kernel-tier parity rows from ``benchmarks.kernel_bench --smoke``
+  (``kernel_*_relerr`` interpret-mode error ceilings,
+  ``kernel_gating_topk_index_match`` == 1, and
+  ``paged_decode_dense_gather_free`` == 1 — the jaxpr of the pallas-mode
+  paged decode step must contain no dense gathered KV view).
 
 A markdown delta table is printed to stdout and appended to the GitHub job
 summary (``$GITHUB_STEP_SUMMARY``) when present.  Refresh the baseline with
@@ -158,8 +164,11 @@ def update_baseline(current: dict, baseline_path: pathlib.Path) -> None:
 def main(argv=None) -> int:
     """CLI entry point; exit 0 iff every gate passes."""
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("results", help="JSON written by "
-                    "benchmarks/decode_speedup.py --json")
+    ap.add_argument("results", nargs="+",
+                    help="JSON file(s) written by benchmarks/*.py --json; "
+                         "rows from later files are merged over earlier "
+                         "ones so one gate covers decode_speedup + "
+                         "kernel_bench output together")
     ap.add_argument("--baseline", default=str(ROOT / "benchmarks"
                                               / "baseline.json"))
     ap.add_argument("--update-baseline", action="store_true",
@@ -167,7 +176,11 @@ def main(argv=None) -> int:
                          "current results instead of gating")
     args = ap.parse_args(argv)
 
-    current = json.loads(pathlib.Path(args.results).read_text())
+    rows_all: dict = {}
+    for path in args.results:
+        rows_all.update(json.loads(pathlib.Path(path).read_text())
+                        .get("rows", {}))
+    current = {"rows": rows_all}
     baseline_path = pathlib.Path(args.baseline)
     if args.update_baseline:
         update_baseline(current, baseline_path)
