@@ -382,6 +382,87 @@ def mixed_length_serving_rows(kind, model, params, *, smoke):
     ]
 
 
+def shared_prefix_serving_rows(kind, model, params, *, smoke):
+    """Continuous serving of a shared-prefix workload (every request opens
+    with the same 256-token system prompt) under a FIXED paged-KV budget,
+    prefix sharing on vs off.  With sharing, admissions alias the system
+    prompt's resident pages instead of re-prefilling and re-storing them, so
+    the same pool sustains far more concurrent slots —
+    `prefix_sharing_occupancy_gain` (CI gate: >= 1.5x) — while the sampled
+    tokens stay identical (`prefix_sharing_tokens_equal`).  One request
+    repeats another's prompt exactly, so its first decode write must
+    copy-on-write the shared trailing page (`prefix_sharing_cow_copies`,
+    CI gate: >= 1)."""
+    from repro.serving.api import DenseBackend
+    from repro.serving.batching import BatchingServer, Request
+
+    page, max_len = 64, 320
+    pool_pages = 10                     # = 2 unshared requests' full budget
+    sys_len, suf_len, new_toks = 256, 16, 12
+    n_req = 8 if smoke else 16
+    vocab = model.cfg.vocab_size
+
+    def workload():
+        rng = np.random.default_rng(17)
+        sys_p = rng.integers(0, vocab, sys_len)
+        reqs = [Request(rid=i,
+                        prompt=np.concatenate(
+                            [sys_p, rng.integers(0, vocab, suf_len)]),
+                        max_new_tokens=new_toks) for i in range(n_req)]
+        # rid=1 repeats rid=0's prompt verbatim: a whole-prompt alias whose
+        # first decode write lands on the shared trailing page -> one COW
+        reqs[1] = Request(rid=1, prompt=reqs[0].prompt.copy(),
+                          max_new_tokens=new_toks)
+        return reqs
+
+    def serve(sharing):
+        be = DenseBackend(model, params, paged=True, page_size=page,
+                          kv_pages=pool_pages, prefix_sharing=sharing)
+        # admit_k=1 so each prompt is registered before the next admission
+        # matches against it (the serving prefix-cache steady state)
+        srv = BatchingServer(be, max_batch=n_req, max_len=max_len,
+                             admit_k=1)
+        for r in workload():
+            srv.submit(r)
+        t0 = time.perf_counter()
+        srv.run()
+        dt = time.perf_counter() - t0
+        outs = {r.rid: r.output for r in srv.completed}
+        return srv.stats(), outs, dt
+
+    plain, outs_p, dt_p = serve(sharing=False)
+    shared, outs_s, dt_s = serve(sharing=True)
+    tokens_equal = int(len(outs_p) == len(outs_s) == n_req and all(
+        np.array_equal(outs_p[r], outs_s[r]) for r in outs_p))
+    gain = shared["mean_occupancy"] / plain["mean_occupancy"]
+    return [
+        (f"prefix_sharing_kv_budget[{kind}]", pool_pages,
+         f"KV pages ({page} tok) = 2 unshared {sys_len}+{suf_len}-token "
+         "requests"),
+        (f"prefix_sharing_occupancy[{kind}][off]",
+         round(plain["mean_occupancy"], 2),
+         "mean live slots/step, paged pool, no sharing"),
+        (f"prefix_sharing_occupancy[{kind}][on]",
+         round(shared["mean_occupancy"], 2),
+         "mean live slots/step, same pool, radix prefix cache on"),
+        (f"prefix_sharing_occupancy_gain[{kind}]", round(gain, 2),
+         "sharing-on vs sharing-off sustained occupancy (CI gate: >= 1.5x)"),
+        (f"prefix_sharing_hit_tokens[{kind}]",
+         shared["backend"].get("prefix_hit_tokens", 0),
+         "prompt tokens served from aliased pages instead of prefill"),
+        (f"prefix_sharing_cow_copies[{kind}]",
+         shared["backend"].get("cow_copies", 0),
+         "first-divergent-write page copies (CI gate: >= 1)"),
+        (f"prefix_sharing_tokens_equal[{kind}]", tokens_equal,
+         "1 iff every request's sampled tokens match the unshared run "
+         "(CI gate: >= 1)"),
+        (f"prefix_sharing_wall_s[{kind}][off]", round(dt_p, 2),
+         f"{n_req} shared-prefix requests end to end"),
+        (f"prefix_sharing_wall_s[{kind}][on]", round(dt_s, 2),
+         f"{n_req} shared-prefix requests end to end"),
+    ]
+
+
 def run(smoke: bool = False):
     rows = []
     kinds = ("mixtral-smoke",) if smoke else ("mixtral-smoke", "phi-smoke")
@@ -395,6 +476,8 @@ def run(smoke: bool = False):
                                               smoke=smoke))
             rows.extend(mixed_length_serving_rows(kind, model, params,
                                                   smoke=smoke))
+            rows.extend(shared_prefix_serving_rows(kind, model, params,
+                                                   smoke=smoke))
         seqs = common.eval_token_stream(2 if smoke else 4)
         e = model.cfg.moe.num_experts
         n_entities = model.cfg.num_layers * e

@@ -99,6 +99,10 @@ class EngineConfig:
     kv_page_size: int = 64
     kv_pages: Optional[int] = None
     prefill_chunk: int = 64
+    # prefix sharing (paged KV only): admissions alias trie-matched prompt
+    # prefix pages across slots with copy-on-write on divergence; admission
+    # then only charges the unshared suffix (see models/kv_pages.py)
+    prefix_sharing: bool = True
 
 
 class OffloadEngine:
@@ -348,10 +352,14 @@ class OffloadEngine:
 
     def _paged_step_prologue(self, rows):
         """Grow every active slot's page chain for the token about to be
-        written and export the page table once per step."""
+        written (copying shared pages off their sharers first — decode
+        appending into an aliased prefix page must not corrupt it) and
+        export the page table once per step."""
         pos = np.asarray(self.positions)
         for r in rows:
-            self.kv_pool.ensure(r, int(pos[r]) + 1)
+            p = int(pos[r])
+            self.kv_pool.ensure(r, p + 1)
+            self.kv_pool.make_writable(r, p, p + 1)
         return self.kv_pool.table_device(), jnp.asarray(self.active)
 
     def _ffn_input(self, p, x):
@@ -467,7 +475,8 @@ class OffloadEngine:
             self.kv_pool = self.model.init_cache(
                 batch, max_len, paged=True,
                 page_size=self.ecfg.kv_page_size,
-                num_pages=self.ecfg.kv_pages)
+                num_pages=self.ecfg.kv_pages,
+                prefix_sharing=self.ecfg.prefix_sharing)
             self._admission = ChunkedPrefill(self.model, self.params,
                                              self.kv_pool,
                                              chunk=self.ecfg.prefill_chunk)
@@ -603,11 +612,13 @@ class OffloadEngine:
             done[slot] = self.join(slot, prompt)
         return done
 
-    def can_admit(self, tokens: int) -> bool:
-        """KV-capacity admission gate: paged KV checks unreserved pages;
-        dense KV always admits (slots are pre-allocated to max_len)."""
+    def can_admit(self, tokens: int, prompt=None) -> bool:
+        """KV-capacity admission gate: paged KV checks unreserved pages
+        (with `prompt`, net of the best prefix-sharing plan — aliased
+        prefix pages cost nothing); dense KV always admits (slots are
+        pre-allocated to max_len)."""
         if self.ecfg.paged_kv and self.kv_pool is not None:
-            return self.kv_pool.can_reserve(tokens)
+            return self.kv_pool.can_reserve(tokens, prompt=prompt)
         return True
 
     def release(self, slot: int):

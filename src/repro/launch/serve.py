@@ -75,9 +75,22 @@ def main():
                          "dense equivalent, batch * ceil(max_len/page))")
     ap.add_argument("--prefill-chunk", type=int, default=64,
                     help="tokens per chunked-prefill call (--paged-kv)")
+    ap.add_argument("--prefix-sharing", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="radix prefix cache over the KV page pool "
+                         "(--paged-kv): admissions alias already-resident "
+                         "prompt-prefix pages across slots (copy-on-write "
+                         "on divergence) and only pay for their unshared "
+                         "suffix.  --no-prefix-sharing prefills every "
+                         "prompt in full")
     ap.add_argument("--admit-k", type=int, default=4,
                     help="max requests prefilling concurrently in the "
                          "scheduler (--serve-requests)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend a common N-token prefix (a shared system "
+                         "prompt) to every --serve-requests prompt, so the "
+                         "--prefix-sharing radix cache has something to "
+                         "alias (0 = fully distinct prompts)")
     ap.add_argument("--hi-slots", type=int, default=16)
     ap.add_argument("--lo-slots", type=int, default=8)
     ap.add_argument("--t1", type=float, default=0.6)
@@ -132,19 +145,24 @@ def main():
             upgrade=args.upgrade, link_gbps=args.link_gbps)
         if kind == "hobbit" else None,
         paged=args.paged_kv, page_size=args.page_size,
-        kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk)
+        kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
+        prefix_sharing=args.prefix_sharing)
 
     rng = np.random.default_rng(0)
     report = {"backend": kind, "paged_kv": args.paged_kv}
 
     if args.serve_requests > 0:
         srv = BatchingServer(backend, max_batch=args.max_batch,
-                             max_len=args.prompt_len * 2 + args.new_tokens + 8,
+                             max_len=(args.shared_prefix + args.prompt_len * 2
+                                      + args.new_tokens + 8),
                              admit_k=args.admit_k)
+        common = rng.integers(0, cfg.vocab_size, args.shared_prefix)
         for i in range(args.serve_requests):
             plen = args.prompt_len * (1 + i % 2)
+            prompt = np.concatenate(
+                [common, rng.integers(0, cfg.vocab_size, plen)])
             srv.submit(Request(
-                rid=i, prompt=rng.integers(0, cfg.vocab_size, plen),
+                rid=i, prompt=prompt,
                 max_new_tokens=args.new_tokens // (1 + i % 2)))
         srv.run()
         report["serving"] = srv.stats()

@@ -9,29 +9,50 @@ serving allocation, the KV cache:
   * ``PagedKVPool`` owns, per transformer layer, K and V buffers of shape
     ``(num_pages, page_size, num_kv_heads, head_dim)`` plus host-side
     metadata: a per-slot page table (logical page index -> physical page id),
-    a free list, and per-slot admission *reservations* so a request admitted
-    into a slot can always grow to its declared total length even while other
-    requests are being admitted concurrently.
+    a free list, per-page refcounts, and per-slot admission *reservations* so
+    a request admitted into a slot can always grow to its declared total
+    length even while other requests are being admitted concurrently.
+  * **Prefix sharing** (``prefix_sharing=True``): completed prompts are
+    registered page-by-page in a radix trie keyed by token content.  A new
+    admission matches its prompt against the trie and *aliases* the longest
+    covered prefix — full pages, plus a trailing partial page whose written
+    tokens agree with the prompt — into its own page table (refcount++),
+    skipping prefill for the matched tokens and reserving pages only for the
+    unshared suffix.  The first write into a shared page (the divergent
+    suffix landing in a partial prefix page, or decode appending past the
+    prompt) triggers **copy-on-write**: the writer's table entry is switched
+    to a fresh page and the page contents are copied on device before the
+    scatter (``make_writable``); readers keep the original.  Sharing is
+    live-slot only — a released slot drops out of the trie, so
+    ``refcount[p]`` always equals the number of slot tables referencing
+    ``p``.
   * The jit-facing view is purely functional: ``table_device()`` exports the
     page table as an int32 ``(batch, max_pages_per_slot)`` array, and the
     paged attention kernels (``layers.paged_attn_decode`` /
     ``layers.paged_attn_prefill_chunk``) gather/scatter through it, returning
-    updated page buffers that the host writes back.
-  * ``release(slot)`` returns the slot's pages to the free list, so the next
-    queued request can be admitted mid-flight without reallocating anything —
-    the continuous-batching analogue of the engine's expert-slot eviction.
+    updated page buffers that the host writes back.  Aliased tables need no
+    kernel changes: the kernels index physical pages through the table, so
+    two slots whose tables point at the same page attend over the same KV.
+  * ``release(slot)`` decrements the refcount of every page in the slot's
+    table and returns the exclusively-owned ones to the free list, so the
+    next queued request can be admitted mid-flight without reallocating
+    anything.  A second ``release`` of the same slot is a clean no-op.
 
 ``ChunkedPrefill`` is the shared admission driver: it feeds prompts through
 ``model.prefill_chunk_paged`` in fixed-size chunks (one *batched* jitted call
 per chunk covering every request currently being admitted) so long prompts
-never stall in-flight decodes.  Both ``DenseBackend`` and the
-``OffloadEngine`` use it.
+never stall in-flight decodes.  With prefix sharing it resumes feeding at
+the matched length (re-feeding at least the final prompt token so last-token
+logits exist) and passes a per-row ``wstart`` to the kernel so re-fed
+positions *attend* but never *re-write* aliased pages.  Both
+``DenseBackend`` and the ``OffloadEngine`` use it.
 
 See ``docs/ARCHITECTURE.md`` for how this fits the request lifecycle.
 """
 
 from __future__ import annotations
 
+from functools import partial
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -54,8 +75,40 @@ def pages_for(tokens: int, page_size: int) -> int:
     return -(-int(tokens) // page_size) if tokens > 0 else 0  # analysis: ignore[host-sync-in-jit]
 
 
+@partial(jax.jit, donate_argnums=(0,))
+def _copy_page(pages, src, dst):
+    """Copy physical page `src` onto `dst` inside one page buffer (the COW
+    device copy).  src/dst are traced int32 scalars, so every (shape, dtype)
+    compiles exactly once regardless of which pages are copied."""
+    return pages.at[dst].set(pages[src])
+
+
+class _PrefixNode:
+    """One page of a registered prompt chain in the radix prefix index.
+
+    ``tokens`` is the page's written token content (a full ``page_size``
+    tuple for interior pages, shorter for a trailing partial page — partial
+    nodes are always leaves); ``page`` is the physical page id whose KV holds
+    those tokens; ``refs`` is the set of live slots whose tables alias the
+    page *through this node* (registrant + sharers — a slot that copy-on-
+    writes away is removed).  Nodes are pruned when ``refs`` empties, so the
+    trie never retains pages beyond the slots that own them."""
+
+    __slots__ = ("tokens", "page", "parent", "children", "partials", "refs")
+
+    def __init__(self, tokens: Tuple[int, ...], page: int,
+                 parent: Optional["_PrefixNode"]):
+        self.tokens = tokens
+        self.page = page
+        self.parent = parent
+        self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
+        self.partials: List[_PrefixNode] = []
+        self.refs: set = set()
+
+
 class PagedKVPool:
-    """Fixed device-resident KV page pool with per-slot page tables.
+    """Fixed device-resident KV page pool with per-slot page tables, a radix
+    prefix index for cross-slot page aliasing, and copy-on-write.
 
     The pool is sized once (``num_pages`` pages of ``page_size`` tokens per
     layer); serving slots draw pages on demand and return them on release.
@@ -66,13 +119,16 @@ class PagedKVPool:
 
     def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
                  dtype, num_pages: int, page_size: int = 64,
-                 max_pages_per_slot: int = 0):
+                 max_pages_per_slot: int = 0, prefix_sharing: bool = True):
         """max_pages_per_slot bounds one slot's logical length (defaults to
-        the whole pool); it is the width of the exported page table."""
+        the whole pool); it is the width of the exported page table.
+        prefix_sharing=False disables the radix index entirely (admissions
+        always prefill their full prompt and share no pages)."""
         self.num_layers = num_layers
         self.page_size = int(page_size)
         self.num_pages = int(num_pages)
         self.max_pages_per_slot = int(max_pages_per_slot or num_pages)
+        self.prefix_sharing = bool(prefix_sharing)
         self.k: List[jax.Array] = [
             jnp.zeros((num_pages, page_size, num_kv_heads, head_dim), dtype)
             for _ in range(num_layers)]
@@ -85,7 +141,18 @@ class PagedKVPool:
         self.owned: List[List[int]] = []
         self.lens = np.zeros((0,), np.int64)
         self.reserved = np.zeros((0,), np.int64)   # pages promised, not drawn
+        self.refcount = np.zeros((num_pages,), np.int32)  # owner: main-thread
         self._table_dev = None
+        self._root = _PrefixNode((), -1, None)            # owner: main-thread
+        self._page_node: Dict[int, _PrefixNode] = {}      # owner: main-thread
+        self._slot_nodes: List[List[_PrefixNode]] = []    # owner: main-thread
+        # pages that may yet be consumed by copy-on-write: one per extra
+        # sharer of each *partial* (writable) shared page.  Subtracted from
+        # reservable_pages() so a donor-side COW can never steal a page
+        # promised to another slot's reservation.
+        self.cow_debt = 0                                 # owner: main-thread
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
 
     # ------------- batch lifecycle -------------
     def start(self, batch: int):
@@ -98,13 +165,224 @@ class PagedKVPool:
         self.owned = [[] for _ in range(batch)]
         self.lens = np.zeros((batch,), np.int64)
         self.reserved = np.zeros((batch,), np.int64)
+        self.refcount = np.zeros((self.num_pages,), np.int32)
+        self._root = _PrefixNode((), -1, None)
+        self._page_node = {}
+        self._slot_nodes = [[] for _ in range(batch)]
+        self.cow_debt = 0
+        self.prefix_hit_tokens = 0
+        self.cow_copies = 0
+        self._table_dev = None
+
+    # ------------- radix prefix index -------------
+    def _is_partial(self, node: _PrefixNode) -> bool:
+        return len(node.tokens) < self.page_size
+
+    # owner: main-thread
+    def _refs_add(self, node: _PrefixNode, slot: int):
+        if self._is_partial(node) and len(node.refs) >= 1:
+            self.cow_debt += 1        # one more potential COW on this page
+        node.refs.add(slot)
+
+    # owner: main-thread
+    def _refs_discard(self, node: _PrefixNode, slot: int):
+        if slot not in node.refs:
+            return
+        if self._is_partial(node) and len(node.refs) >= 2:
+            self.cow_debt -= 1
+        node.refs.discard(slot)
+        if not node.refs:
+            self._prune(node)
+
+    # owner: main-thread
+    def _prune(self, node: _PrefixNode):
+        """Unlink a no-longer-referenced node from the trie.  Children prune
+        themselves: a slot referencing a node references all its ancestors,
+        so a node's refs can only empty after its descendants'."""
+        parent = node.parent
+        if parent is not None:
+            if self._is_partial(node):
+                if node in parent.partials:
+                    parent.partials.remove(node)
+            elif parent.children.get(node.tokens) is node:
+                del parent.children[node.tokens]
+        if self._page_node.get(node.page) is node:
+            del self._page_node[node.page]
+
+    def _match_prefix(self, prompt: np.ndarray
+                      ) -> Tuple[List[_PrefixNode], Optional[_PrefixNode],
+                                 int, int]:
+        """Longest trie match for `prompt`: (full-page node chain, best
+        partial leaf or None, tokens covered by the chain, tokens covered by
+        the partial).  A partial page matches when every written token the
+        prompt reaches agrees (tokens written past the prompt's end are
+        invisible — reads are masked by position)."""
+        psz, L = self.page_size, len(prompt)
+        node, nodes, off = self._root, [], 0
+        while L - off >= psz:
+            child = node.children.get(tuple(prompt[off:off + psz].tolist()))
+            if child is None:
+                break
+            nodes.append(child)
+            off += psz
+            node = child
+        best, bestk = None, 0
+        for pc in node.partials:
+            k = min(len(pc.tokens), L - off)
+            if k > bestk and pc.tokens[:k] == tuple(
+                    prompt[off:off + k].tolist()):
+                best, bestk = pc, k
+        return nodes, best, off, bestk
+
+    def _share_plan(self, tokens: int, prompt
+                    ) -> Optional[Tuple[List[_PrefixNode], int, int]]:
+        """Best admissible aliasing plan for a fresh slot needing `tokens`
+        total KV entries: (node chain to alias, matched token count, suffix
+        pages to reserve).  Tries partial-page sharing first (costs one
+        cow_debt unit of headroom), falls back to full pages only, then to
+        None (no sharing).  Non-mutating."""
+        if not (self.prefix_sharing and prompt is not None):
+            return None
+        prompt = np.asarray(prompt).reshape(-1)
+        if len(prompt) == 0:
+            return None
+        need = pages_for(tokens, self.page_size)
+        nodes, best, off, bestk = self._match_prefix(prompt)
+        plans = []
+        if best is not None and bestk > 0:
+            plans.append((nodes + [best], off + bestk, 1))
+        if nodes:
+            plans.append((list(nodes), off, 0))
+        for chain, matched, debt in plans:
+            if len(chain) > need:     # reserve_tokens shorter than the match
+                continue
+            extra = need - len(chain)
+            if extra + debt <= self.reservable_pages():
+                return chain, matched, extra
+        return None
+
+    def _alias(self, slot: int, chain: List[_PrefixNode]):
+        """Point the first len(chain) logical pages of `slot` at the chain's
+        physical pages (refcount++ each; no prefill, no free-list draw)."""
+        own = self.owned[slot]
+        for node in chain:
+            self.table[slot, len(own)] = node.page
+            own.append(node.page)
+            self.refcount[node.page] += 1
+            self._refs_add(node, slot)
+            self._slot_nodes[slot].append(node)
+        self._table_dev = None
+
+    # owner: main-thread
+    def register_prefix(self, slot: int, prompt):
+        """Insert `slot`'s completed prompt into the radix index, page by
+        page, so later admissions can alias it.  Pages already shared (the
+        slot aliased them at admission) are skipped; content another live
+        slot registered first wins (we stop rather than fork the trie on
+        identical content under a different physical page)."""
+        if not self.prefix_sharing:
+            return
+        prompt = np.asarray(prompt).reshape(-1)
+        psz, L = self.page_size, len(prompt)
+        node, own = self._root, self.owned[slot]
+        for i in range(L // psz):
+            content = tuple(prompt[i * psz:(i + 1) * psz].tolist())
+            mine = int(own[i])
+            child = node.children.get(content)
+            if child is not None:
+                if child.page != mine:
+                    return            # duplicate content registered first
+                node = child
+                continue
+            if mine in self._page_node:
+                return  # page already indexed under other content (aliased)
+            child = _PrefixNode(content, mine, node)
+            child.refs.add(slot)
+            node.children[content] = child
+            self._page_node[mine] = child
+            self._slot_nodes[slot].append(child)
+            node = child
+        rem = L % psz
+        if rem == 0:
+            return
+        mine = int(own[L // psz])
+        if mine in self._page_node:
+            return                    # trailing page is itself an alias
+        content = tuple(prompt[L - rem:].tolist())
+        if any(pc.tokens == content for pc in node.partials):
+            return                    # identical partial already registered
+        leaf = _PrefixNode(content, mine, node)
+        leaf.refs.add(slot)
+        node.partials.append(leaf)
+        self._page_node[mine] = leaf
+        self._slot_nodes[slot].append(leaf)
+
+    # ------------- copy-on-write -------------
+    # owner: main-thread
+    def make_writable(self, slot: int, start: int, end: int):
+        """Host-side COW guard: call before any jitted call that writes
+        token positions [start, end) of `slot`.  Shared target pages
+        (refcount > 1) are copied to fresh pages — the writer's table entry
+        moves, readers keep the original.  A page only this slot references
+        stays registered when the write lands strictly PAST the node's
+        recorded tokens (a decode append extends the page; matchers only
+        ever read the recorded prefix, and their position mask hides the
+        rest) and is unregistered when the write overlaps them (the
+        recorded content is about to diverge)."""
+        if not self.prefix_sharing or start >= end:
+            return
+        psz = self.page_size
+        own = self.owned[slot]
+        for li in range(int(start) // psz, (int(end) - 1) // psz + 1):
+            if li >= len(own):
+                break                 # not drawn yet -> cannot be shared
+            pid = int(own[li])
+            node = self._page_node.get(pid)
+            if node is None or slot not in node.refs:
+                continue              # exclusive page
+            if self.refcount[pid] > 1:
+                # other slots read this page (up to their own matched
+                # lengths): any write, even past the recorded tokens, could
+                # land where another sharer appends — copy first
+                self._cow(slot, li, node)
+            elif max(int(start), li * psz) - li * psz < len(node.tokens):
+                self._refs_discard(node, slot)  # sole owner: just unregister
+                self._slot_nodes[slot].remove(node)
+            # else: sole-owner append past the recorded tokens — the record
+            # stays accurate, so the page stays matchable for later sharers
+
+    def _cow(self, slot: int, li: int, node: _PrefixNode):
+        """Copy-on-write logical page `li` of `slot` off the shared physical
+        page: draw a fresh page (funded by the cow_debt headroom), copy the
+        KV content on device, and repoint this slot's table entry.  The
+        other sharers (and the trie) keep the original page."""
+        pid = node.page
+        promised = int(self.reserved.sum())
+        if not self.free or len(self.free) - promised - (
+                self.cow_debt - 1) <= 0:
+            raise PagePoolExhausted(
+                f"slot {slot}: pool exhausted on copy-on-write of page {pid} "
+                f"({len(self.free)} free, {promised} reserved, "
+                f"{self.cow_debt} COW debt)")
+        new = self.free.pop()
+        self.refcount[new] = 1
+        self.refcount[pid] -= 1
+        self.table[slot, li] = new
+        self.owned[slot][li] = new
+        self._refs_discard(node, slot)          # releases one cow_debt unit
+        self._slot_nodes[slot].remove(node)
+        s, d = jnp.asarray(pid, jnp.int32), jnp.asarray(new, jnp.int32)
+        self.k = [_copy_page(kp, s, d) for kp in self.k]
+        self.v = [_copy_page(vp, s, d) for vp in self.v]
+        self.cow_copies += 1
         self._table_dev = None
 
     # ------------- admission reservations -------------
     def reservable_pages(self) -> int:
         """Pages available to NEW admissions: free pages minus pages already
-        promised to in-flight slots' future growth."""
-        return len(self.free) - int(self.reserved.sum())
+        promised to in-flight slots' future growth minus pages that pending
+        copy-on-writes of shared partial pages may consume."""
+        return len(self.free) - int(self.reserved.sum()) - self.cow_debt
 
     def fits(self, tokens: int) -> bool:
         """True iff a request of `tokens` total KV entries can EVER be
@@ -113,19 +391,28 @@ class PagedKVPool:
         need = pages_for(tokens, self.page_size)
         return need <= min(self.max_pages_per_slot, self.num_pages)
 
-    def can_reserve(self, tokens: int) -> bool:
+    def can_reserve(self, tokens: int, prompt=None) -> bool:
         """True iff a request needing `tokens` total KV entries can be
         admitted now without ever starving an already-admitted slot (False
         for requests that exceed the per-slot table width or the pool —
-        those can never be admitted; see `fits`)."""
+        those can never be admitted; see `fits`).  With `prompt`, admission
+        cost is evaluated against the best prefix-sharing plan: only the
+        unshared suffix needs reservable pages.  Non-mutating."""
         if not self.fits(tokens):
             return False
-        return pages_for(tokens, self.page_size) <= self.reservable_pages()
+        if pages_for(tokens, self.page_size) <= self.reservable_pages():
+            return True
+        return self._share_plan(tokens, prompt) is not None
 
-    def reserve(self, slot: int, tokens: int):
+    # owner: main-thread
+    def reserve(self, slot: int, tokens: int, prompt=None) -> int:
         """Promise `tokens` total KV entries to `slot` (its prompt plus its
-        decode budget).  Raises PagePoolExhausted if the promise cannot be
-        kept, and ValueError if it exceeds the slot's page-table width."""
+        decode budget).  With `prompt` and prefix sharing on, first alias
+        the longest trie-matched prefix into the slot's table and charge the
+        reservation only for the unshared suffix.  Returns the matched token
+        count (0 without sharing).  Raises PagePoolExhausted if the promise
+        cannot be kept, and ValueError if it exceeds the slot's page-table
+        width."""
         need = pages_for(tokens, self.page_size)
         if need > self.max_pages_per_slot:
             raise ValueError(
@@ -134,23 +421,34 @@ class PagedKVPool:
         if need > self.num_pages:
             raise PagePoolExhausted(
                 f"request needs {need} pages > pool size {self.num_pages}")
+        if self.prefix_sharing and prompt is not None and not self.owned[slot]:
+            plan = self._share_plan(tokens, prompt)
+            if plan is not None:
+                chain, matched, extra = plan
+                self._alias(slot, chain)
+                self.reserved[slot] = max(int(self.reserved[slot]), extra)
+                self.lens[slot] = max(int(self.lens[slot]), matched)
+                self.prefix_hit_tokens += matched
+                return matched
         extra = need - len(self.owned[slot])
         if extra > self.reservable_pages() + int(self.reserved[slot]):
             raise PagePoolExhausted(
                 f"slot {slot}: {extra} pages wanted, "
                 f"{self.reservable_pages()} reservable")
         self.reserved[slot] = max(int(self.reserved[slot]), extra)
+        return 0
 
     # ------------- allocation -------------
     def ensure(self, slot: int, length: int):
         """Grow `slot` to cover `length` tokens, drawing pages from the free
-        list (the slot's own reservation first).  No-op if already covered.
+        list (the slot's own reservation first).  No-op if already covered
+        (aliased prefix pages count as covered — they are never re-drawn).
 
-        The draw is guarded against OTHER slots' reservations: a slot
-        growing without (or past) its own reservation may only take pages
-        the pool has not promised elsewhere, so the offender raises
-        PagePoolExhausted here — a properly-reserved slot can never lose a
-        promised page and hit exhaustion mid-decode."""
+        The draw is guarded against OTHER slots' reservations and pending
+        COW debt: a slot growing without (or past) its own reservation may
+        only take pages the pool has not promised elsewhere, so the offender
+        raises PagePoolExhausted here — a properly-reserved slot can never
+        lose a promised page and hit exhaustion mid-decode."""
         target = pages_for(length, self.page_size)
         if target > self.max_pages_per_slot:
             raise ValueError(
@@ -159,13 +457,15 @@ class PagedKVPool:
         while len(own) < target:
             promised_to_others = int(self.reserved.sum()) - int(
                 self.reserved[slot])
-            if not self.free or len(self.free) - promised_to_others <= 0:
+            if not self.free or len(self.free) - promised_to_others - (
+                    self.cow_debt) <= 0:
                 raise PagePoolExhausted(
                     f"slot {slot}: pool exhausted growing to {length} tokens "
                     f"({len(self.free)} free, {promised_to_others} promised "
                     "to other slots' reservations; admit with reserve() to "
                     "prevent this)")
             pid = self.free.pop()
+            self.refcount[pid] = 1
             self.table[slot, len(own)] = pid
             own.append(pid)
             if self.reserved[slot] > 0:
@@ -173,10 +473,23 @@ class PagedKVPool:
             self._table_dev = None
         self.lens[slot] = max(int(self.lens[slot]), int(length))
 
+    # owner: main-thread
     def release(self, slot: int):
-        """Return the slot's pages to the pool and drop its reservation —
-        the next queued request can draw them immediately."""
-        self.free.extend(self.owned[slot])
+        """Drop the slot's claim on its pages — exclusively-owned pages
+        (refcount hitting 0) return to the free list immediately, shared
+        pages stay with their remaining sharers — and drop its reservation,
+        so the next queued request can draw them at once.  Releasing an
+        already-released (or never-admitted) slot is a clean no-op: the
+        slot owns nothing, so no refcount is decremented twice and the free
+        list cannot be corrupted."""
+        for node in reversed(self._slot_nodes[slot]):
+            self._refs_discard(node, slot)
+        self._slot_nodes[slot] = []
+        for pid in self.owned[slot]:
+            self.refcount[pid] -= 1
+            if self.refcount[pid] <= 0:
+                self.refcount[pid] = 0
+                self.free.append(pid)
         self.owned[slot] = []
         self.lens[slot] = 0
         self.reserved[slot] = 0
@@ -201,6 +514,11 @@ class PagedKVPool:
         """pages_used / num_pages — the pool-pressure gauge."""
         return self.pages_used / self.num_pages if self.num_pages else 0.0
 
+    @property
+    def aliased_pages(self) -> int:
+        """Physical pages currently referenced by more than one slot."""
+        return int(np.sum(self.refcount >= 2))
+
     def stats(self) -> Dict[str, float]:
         """JSON-serializable pool counters (backend stats() contract keys)."""
         return {
@@ -208,6 +526,11 @@ class PagedKVPool:
             "kv_pages_total": self.num_pages,
             "kv_page_fraction": self.page_fraction,
             "kv_page_size": self.page_size,
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "cow_copies": self.cow_copies,
+            "aliased_page_fraction": (
+                self.aliased_pages / self.pages_used if self.pages_used
+                else 0.0),
         }
 
 
@@ -223,6 +546,14 @@ class ChunkedPrefill:
     ``step()`` with decode steps so long prompts never stall in-flight
     decodes; ``run(slot, prompt, ...)`` is the blocking convenience loop used
     by the protocol-level ``join``.
+
+    Prefix sharing: ``begin`` aliases the trie-matched prefix via
+    ``pool.reserve(..., prompt=prompt)`` and resumes feeding at the matched
+    length (always re-feeding the final prompt token so the finished
+    admission has last-token logits); the matched length rides along as the
+    row's ``wstart`` so re-fed positions attend over the aliased pages but
+    drop their K/V writes.  Completed prompts are registered back into the
+    trie for the next admission to match.
     """
 
     def __init__(self, model, params, pool: PagedKVPool, *, chunk: int = 64,
@@ -238,17 +569,21 @@ class ChunkedPrefill:
         # holding input+output pools alive (2x KV footprint)
         self._fn = (jax.jit(model.prefill_chunk_paged, donate_argnums=(1, 2))
                     if jit else model.prefill_chunk_paged)
-        self._pending: Dict[int, Tuple[np.ndarray, int]] = {}  # slot->(p,fed)
+        # slot -> (prompt, fed, wstart): next feed offset + write floor
+        self._pending: Dict[int, Tuple[np.ndarray, int, int]] = {}
         self._unclaimed: Dict[int, np.ndarray] = {}  # finished during run()
 
     def begin(self, slot: int, prompt, reserve_tokens: Optional[int] = None):
         """Register `prompt` for admission into `slot`, reserving
-        `reserve_tokens` total KV entries (default: the prompt alone)."""
+        `reserve_tokens` total KV entries (default: the prompt alone).  A
+        trie-matched prefix is aliased instead of re-prefilled."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert len(prompt) > 0, "empty prompt"
         assert slot not in self._pending, f"slot {slot} already admitting"
-        self.pool.reserve(slot, int(reserve_tokens or len(prompt)))
-        self._pending[slot] = (prompt, 0)
+        matched = self.pool.reserve(slot, int(reserve_tokens or len(prompt)),
+                                    prompt=prompt)
+        fed = min(int(matched), len(prompt) - 1)
+        self._pending[slot] = (prompt, fed, int(matched))
 
     @property
     def pending_slots(self) -> List[int]:
@@ -268,26 +603,30 @@ class ChunkedPrefill:
         toks = np.zeros((len(slots), c), np.int32)
         starts = np.zeros((len(slots),), np.int32)
         ns = np.zeros((len(slots),), np.int32)
+        wstarts = np.zeros((len(slots),), np.int32)
         for i, s in enumerate(slots):
-            prompt, fed = self._pending[s]
+            prompt, fed, ws = self._pending[s]
             n = min(c, len(prompt) - fed)
             toks[i, :n] = prompt[fed : fed + n]
-            starts[i], ns[i] = fed, n
+            starts[i], ns[i], wstarts[i] = fed, n, ws
             self.pool.ensure(s, fed + n)
+            self.pool.make_writable(s, max(fed, ws), fed + n)
         table_rows = jnp.asarray(self.pool.table[slots])
         lg, ks, vs = self._fn(self.params, self.pool.k, self.pool.v,
                               table_rows, jnp.asarray(toks),
-                              jnp.asarray(starts), jnp.asarray(ns))
+                              jnp.asarray(starts), jnp.asarray(ns),
+                              jnp.asarray(wstarts))
         self.pool.k, self.pool.v = list(ks), list(vs)
         lg = np.asarray(lg, np.float32)
         for i, s in enumerate(slots):
-            prompt, fed = self._pending[s]
+            prompt, fed, ws = self._pending[s]
             fed += int(ns[i])
             if fed >= len(prompt):
                 del self._pending[s]
+                self.pool.register_prefix(s, prompt)
                 finished[s] = lg[i]
             else:
-                self._pending[s] = (prompt, fed)
+                self._pending[s] = (prompt, fed, ws)
         return finished
 
     def run(self, slot: int, prompt,

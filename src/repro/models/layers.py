@@ -371,7 +371,7 @@ def paged_attn_decode(p, x, k_pages, v_pages, table, positions, active,
 
 
 def paged_attn_prefill_chunk(p, x, k_pages, v_pages, table, start, n,
-                             cfg: ModelConfig):
+                             cfg: ModelConfig, wstart=None):
     """One prefill chunk against a paged KV pool: write the chunk's K/V into
     the slot's pages, then attend causally over everything written so far
     (earlier chunks + this one).
@@ -380,15 +380,20 @@ def paged_attn_prefill_chunk(p, x, k_pages, v_pages, table, start, n,
     being admitted together); start: (B,) absolute position of each row's
     first token; n: (B,) valid tokens in the row (n < C pads the final
     chunk — pad positions write nothing and their outputs are garbage the
-    caller masks out).  Returns (out (B,C,D'), new_k_pages, new_v_pages)."""
+    caller masks out); wstart: optional (B,) write floor — positions below
+    it attend over the (aliased, already-written) pages but drop their own
+    K/V writes, so prefix-sharing re-feeds never touch shared pages.
+    Returns (out (B,C,D'), new_k_pages, new_v_pages)."""
     b, c, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
     q, k, v = _paged_qkv(p, x, cfg, positions)
     psz = k_pages.shape[1]
     valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n[:, None]   # (B, C)
+    write_ok = valid if wstart is None else (
+        valid & (positions >= wstart[:, None]))
     page = jnp.take_along_axis(table, positions // psz, axis=1)
-    page = jnp.where(valid, page, k_pages.shape[0])       # pads dropped
+    page = jnp.where(write_ok, page, k_pages.shape[0])    # pads/refeeds drop
     off = positions % psz
     k_pages = k_pages.at[page.reshape(-1), off.reshape(-1)].set(
         k.reshape(b * c, hkv, hd).astype(k_pages.dtype), mode="drop")

@@ -161,13 +161,17 @@ def _layer_decode_paged(p, x, kp, vp, table, positions, active, cfg, is_moe):
     return x, kp, vp
 
 
-def _layer_chunk_paged(p, x, kp, vp, table, start, n, valid_flat, cfg, is_moe):
+def _layer_chunk_paged(p, x, kp, vp, table, start, n, wstart, valid_flat,
+                       cfg, is_moe):
     """One prefill-chunk layer step against paged KV (mirror of
     `_layer_forward` for the paged model class).  valid_flat: (B*C,) live-
-    token mask — pad tokens of the final chunk occupy no MoE capacity."""
+    token mask — pad tokens of the final chunk occupy no MoE capacity.
+    wstart: (B,) per-row write floor — positions below it attend but drop
+    their K/V writes (prefix-sharing re-feed over aliased pages)."""
     h = layers.apply_norm(p["pre_norm"], x, cfg)
     out, kp, vp = layers.paged_attn_prefill_chunk(p["attn"], h, kp, vp,
-                                                  table, start, n, cfg)
+                                                  table, start, n, cfg,
+                                                  wstart=wstart)
     if cfg.sandwich_norm:
         out = layers.apply_norm(p["post_norm"], out, cfg)
     x = x + out
@@ -443,7 +447,8 @@ class Model:
 
     # -------------------- decode --------------------
     def init_cache(self, batch: int, max_len: int, *, paged: bool = False,
-                   page_size: int = 64, num_pages: Optional[int] = None):
+                   page_size: int = 64, num_pages: Optional[int] = None,
+                   prefix_sharing: bool = True):
         """Decode cache for every layer.
 
         paged=False (default): zeroed dense per-slot buffers — every slot
@@ -453,6 +458,8 @@ class Model:
         `page_size`-token pages from a shared pool of `num_pages` (default:
         the dense equivalent, batch * ceil(max_len / page_size)) as they
         grow; drive it with `decode_step_paged` / `prefill_chunk_paged`.
+        prefix_sharing toggles the pool's radix prefix index (cross-slot
+        page aliasing with copy-on-write; ignored for dense caches).
         Only the all-"attn" model class supports it (`supports_paged_kv`)."""
         cfg = self.cfg
         if paged:
@@ -465,7 +472,7 @@ class Model:
                 num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
                 head_dim=cfg.resolved_head_dim, dtype=layers._dt(cfg),
                 num_pages=num_pages or batch * maxp, page_size=page_size,
-                max_pages_per_slot=maxp)
+                max_pages_per_slot=maxp, prefix_sharing=prefix_sharing)
             return_pool.start(batch)
             return return_pool
         hkv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
@@ -609,11 +616,18 @@ class Model:
         return lg, k_pages, v_pages
 
     def prefill_chunk_paged(self, params, k_pages, v_pages, table, tokens,
-                            start, n):
+                            start, n, wstart=None):
         """One chunk of chunked prefill against a paged KV pool: run `tokens`
         (B, C) — row b valid for its first n[b] tokens, starting at absolute
         position start[b] — through every layer, writing K/V into the rows'
         pages and attending over everything written so far.
+
+        wstart: optional (B,) per-row write floor for prefix sharing —
+        positions below wstart[b] are re-fed tokens whose K/V already sits
+        in aliased pages: they attend normally but their writes are dropped,
+        so shared pages are never re-written (the values would be identical;
+        dropping keeps copy-on-write confined to genuinely divergent
+        writes).  None means write everything (no sharing).
 
         Returns (last-valid-token logits (B, V), new_k_pages, new_v_pages).
         Rows may belong to different requests: admission batches up to k
@@ -632,12 +646,14 @@ class Model:
             x = x + pos_table[positions].astype(x.dtype)
         valid_flat = (jnp.arange(c, dtype=jnp.int32)[None, :]
                       < n[:, None]).reshape(-1)
+        if wstart is None:
+            wstart = jnp.zeros_like(start)
         moes = self.cfg.layer_is_moe()
         k_pages, v_pages = list(k_pages), list(v_pages)
         for li, p in enumerate(unstack_layers(cfg, params)):
             x, k_pages[li], v_pages[li] = _layer_chunk_paged(
-                p, x, k_pages[li], v_pages[li], table, start, n, valid_flat,
-                cfg, moes[li])
+                p, x, k_pages[li], v_pages[li], table, start, n, wstart,
+                valid_flat, cfg, moes[li])
         last = jnp.clip(n - 1, 0, c - 1)
         xl = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B,1,D)
         lg = self.logits(params, xl)[:, 0, :]

@@ -15,7 +15,8 @@ a finished request `release()`s its slot mid-flight, and a queued request
     join(slot, prompt (S,)) -> (V,)  admit one request into a slot mid-flight
     join_begin(slot, prompt, ...)    start an *incremental* admission
     join_step() -> {slot: (V,)}      advance all admissions by one chunk
-    can_admit(tokens) -> bool        does KV capacity exist for a request?
+    can_admit(tokens, prompt=None)   does KV capacity exist for a request?
+                                     (with `prompt`: net of prefix sharing)
     release(slot)                    free a slot (and its KV pages)
     step(tokens (B,)) -> (B,V)       one decode step for the whole batch
     stats() -> dict                  backend-specific counters
@@ -96,9 +97,12 @@ class InferenceBackend(Protocol):
         {slot: last-token logits (V,)} for admissions that completed."""
         ...
 
-    def can_admit(self, tokens: int) -> bool:
+    def can_admit(self, tokens: int, prompt=None) -> bool:
         """True iff KV capacity for a request of `tokens` total length is
-        available right now (dense backends: always)."""
+        available right now (dense backends: always).  `prompt` (the token
+        ids about to be admitted) lets paged backends price the request net
+        of prefix sharing: a prompt whose prefix aliases already-resident
+        pages only needs pages for its unshared suffix."""
         ...
 
     def release(self, slot: int) -> None:
@@ -166,7 +170,8 @@ class DenseBackend:
 
     def __init__(self, model: Model, params, *, jit: bool = True,
                  paged: bool = False, page_size: int = 64,
-                 kv_pages: Optional[int] = None, prefill_chunk: int = 64):
+                 kv_pages: Optional[int] = None, prefill_chunk: int = 64,
+                 prefix_sharing: bool = True):
         self.model = model
         self.params = params
         self._jit = jit
@@ -174,6 +179,7 @@ class DenseBackend:
         self.page_size = page_size
         self.kv_pages = kv_pages
         self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing
         if paged and not supports_paged_kv(model.cfg):
             raise ValueError(f"arch {model.cfg.name} does not support "
                              "the paged KV layout")
@@ -216,7 +222,8 @@ class DenseBackend:
             return
         self.kv = self.model.init_cache(batch, max_len, paged=True,
                                         page_size=self.page_size,
-                                        num_pages=self.kv_pages)
+                                        num_pages=self.kv_pages,
+                                        prefix_sharing=self.prefix_sharing)
         self._admission = ChunkedPrefill(self.model, self.params, self.kv,
                                          chunk=self.prefill_chunk,
                                          jit=self._jit)
@@ -301,11 +308,13 @@ class DenseBackend:
         self.active[slot] = True
         return np.asarray(logits[0], np.float32)
 
-    def can_admit(self, tokens: int) -> bool:
-        """Paged: does the pool have unreserved pages for `tokens`?  Dense:
-        always (the (B, max_len) slot is pre-allocated)."""
+    def can_admit(self, tokens: int, prompt=None) -> bool:
+        """Paged: does the pool have unreserved pages for `tokens`?  With
+        `prompt`, the pool prices the best prefix-sharing plan — aliased
+        prefix pages are free, only the unshared suffix needs reservable
+        pages.  Dense: always (the (B, max_len) slot is pre-allocated)."""
         if self.paged:
-            return self.kv.can_reserve(tokens)
+            return self.kv.can_reserve(tokens, prompt=prompt)
         return True
 
     def release(self, slot: int) -> None:
@@ -324,7 +333,11 @@ class DenseBackend:
             pos_host = np.asarray(self.positions)
             for r in range(self.batch):
                 if self.active[r]:
-                    self.kv.ensure(r, int(pos_host[r]) + 1)
+                    p = int(pos_host[r])
+                    self.kv.ensure(r, p + 1)
+                    # decode appending into a shared (aliased) page copies
+                    # it off first — readers keep the original
+                    self.kv.make_writable(r, p, p + 1)
             logits, ks, vs = self._paged_step(
                 self.params, self.kv.k, self.kv.v, self.kv.table_device(),
                 tokens, self.positions, jnp.asarray(self.active))
@@ -347,7 +360,8 @@ class DenseBackend:
              "precision_downgrades": 0, "issue_reorders": 0,
              "link_utilization": 0.0, "per_stream_bytes": [],
              "kv_pages_used": 0, "kv_pages_total": 0,
-             "kv_page_fraction": 0.0}
+             "kv_page_fraction": 0.0, "prefix_hit_tokens": 0,
+             "cow_copies": 0, "aliased_page_fraction": 0.0}
         if self.paged and self.kv is not None:
             s.update(self.kv.stats())
         return s
@@ -395,9 +409,10 @@ class HobbitBackend:
         """Advance every in-progress admission by one prefill chunk."""
         return self.engine.join_step()
 
-    def can_admit(self, tokens: int) -> bool:
-        """KV-capacity gate for admission (always True under dense KV)."""
-        return self.engine.can_admit(tokens)
+    def can_admit(self, tokens: int, prompt=None) -> bool:
+        """KV-capacity gate for admission (always True under dense KV; with
+        `prompt`, paged engines price the request net of prefix sharing)."""
+        return self.engine.can_admit(tokens, prompt=prompt)
 
     def release(self, slot: int) -> None:
         """Free a slot (and its KV pages under paged KV)."""
@@ -422,15 +437,17 @@ class HobbitBackend:
 
 def make_backend(kind: str, model: Model, params, *, engine_config=None,
                  jit: bool = True, paged: bool = False, page_size: int = 64,
-                 kv_pages: Optional[int] = None, prefill_chunk: int = 64):
+                 kv_pages: Optional[int] = None, prefill_chunk: int = 64,
+                 prefix_sharing: bool = True):
     """Factory for launchers: kind in {"dense", "hobbit"}.  `paged` (with
-    `page_size` / `kv_pages` / `prefill_chunk`) selects the paged KV layout
-    on either backend; for hobbit it overrides the corresponding
-    EngineConfig fields."""
+    `page_size` / `kv_pages` / `prefill_chunk` / `prefix_sharing`) selects
+    the paged KV layout on either backend; for hobbit it overrides the
+    corresponding EngineConfig fields."""
     if kind == "dense":
         return DenseBackend(model, params, jit=jit, paged=paged,
                             page_size=page_size, kv_pages=kv_pages,
-                            prefill_chunk=prefill_chunk)
+                            prefill_chunk=prefill_chunk,
+                            prefix_sharing=prefix_sharing)
     if kind == "hobbit":
         import dataclasses
 
@@ -440,7 +457,8 @@ def make_backend(kind: str, model: Model, params, *, engine_config=None,
             ecfg = dataclasses.replace(ecfg, paged_kv=True,
                                        kv_page_size=page_size,
                                        kv_pages=kv_pages,
-                                       prefill_chunk=prefill_chunk)
+                                       prefill_chunk=prefill_chunk,
+                                       prefix_sharing=prefix_sharing)
         eng = OffloadEngine(model, params, ecfg)
         return HobbitBackend(eng)
     raise ValueError(f"unknown backend kind: {kind!r}")

@@ -142,7 +142,9 @@ class BatchingServer:
             while free and self.queue and len(admitting) < self.admit_k:
                 req = self.queue[0]
                 need = len(req.prompt) + req.max_new_tokens + 1
-                if not self.backend.can_admit(need):
+                # the prompt rides along so paged backends can price the
+                # request net of prefix sharing (aliased prefix = free)
+                if not self.backend.can_admit(need, prompt=req.prompt):
                     if not active and not admitting:
                         # nothing in flight can ever free capacity for it
                         raise RuntimeError(

@@ -1,0 +1,37 @@
+"""Fixture: paged-KV pool whose page reclamation runs on the copy stream.
+
+Reproduces the prefix-sharing hazard class: refcounts, the free list and
+the admission reservations are main-thread-owned (the scheduler reads them
+between every step), so deciding a page's fate at copy-completion time on
+the executor races concurrent admissions — a page can be re-drawn while a
+stale table still references it.
+"""
+
+from concurrent.futures import ThreadPoolExecutor
+
+
+class BrokenPagedKVPool:
+    def __init__(self, num_pages):
+        self.refcount = [0] * num_pages     # owner: main-thread
+        self.free = list(range(num_pages))  # owner: main-thread
+        self.owned = {}
+        self._pool = ThreadPoolExecutor(max_workers=1)
+
+    def release_async(self, slot):
+        # BUG: reclamation decided when the copy completes, on the executor,
+        # instead of on the scheduler thread at release time
+        self._pool.submit(self._reclaim, slot)
+
+    def _reclaim(self, slot):
+        for pid in self.owned.get(slot, []):
+            self.refcount[pid] -= 1         # BAD: owned refcount, executor
+            if self.refcount[pid] == 0:
+                self.free.append(pid)       # BAD: owned free list, executor
+        self._drop_reservation(slot)
+
+    def _drop_reservation(self, slot):
+        self.reserve(slot, 0)               # BAD: reached transitively
+
+    # owner: main-thread
+    def reserve(self, slot, tokens):
+        self.owned[slot] = [tokens]

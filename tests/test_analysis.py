@@ -43,6 +43,14 @@ def test_thread_confinement_fixture_flags_all_three_invariants():
     # transitive reachability: _stage_one -> _finish -> cache.pin
     pin = [v for v in vs if "'pin'" in v.message]
     assert pin and "_finish" in pin[0].message
+    # the PR 8 class: paged-KV refcounts / free list reclaimed at
+    # copy-completion time on the executor instead of the scheduler thread
+    refc = [v for v in vs if "'self.refcount'" in v.message]
+    assert refc and refc[0].file.endswith("models/kv_pages.py")
+    assert any("'self.free'" in v.message and ".append()" in v.message
+               for v in vs)
+    rsv = [v for v in vs if "'reserve'" in v.message]
+    assert rsv and "_drop_reservation" in rsv[0].message
 
 
 def test_hot_path_fixture_flags_syncs_and_donation():

@@ -293,6 +293,175 @@ def test_chunked_admission_interleaves_with_decode(setup):
     np.testing.assert_array_equal(got.output, want.tokens[0, len(short_p):])
 
 
+# ------------------------------------------------------- prefix sharing
+def test_prefix_sharing_differential_three_ways(setup):
+    """The same shared-prefix workload produces fp-identical decode logits
+    through paged-with-sharing, paged-without-sharing and the dense layout:
+    aliased pages, COW copies and write-dropped re-feeds are invisible to
+    the math.  Covers a mid-page divergence (forces a partial-page COW) and
+    a page-boundary fork (pure aliasing, no COW)."""
+    m, params = setup
+    rng = np.random.default_rng(10)
+    base = rng.integers(0, 128, 10)         # 2 full 4-token pages + 2 extra
+    # v1 extends base past its end: aliases all 10 tokens (incl. the shared
+    # partial page) and its first divergent write COWs that page
+    v1 = np.concatenate([base, rng.integers(0, 128, 3)])
+    # v2 forks exactly at a page boundary: pure full-page aliasing, no COW
+    v2 = np.concatenate([base[:8], [(base[8] + 1) % 128],
+                         rng.integers(0, 128, 2)])
+    teacher = rng.integers(0, 128, (4, 3))
+    outs = {}
+    for mode in ("sharing", "plain", "dense"):
+        be = DenseBackend(m, params, paged=mode != "dense", page_size=4,
+                          prefill_chunk=4, prefix_sharing=mode == "sharing")
+        be.start_batch(3, 32)
+        for s in range(3):
+            be.release(s)
+        lgs = [be.join(s, p) for s, p in enumerate((base, v1, v2))]
+        for t in range(4):
+            lgs.append(be.step(teacher[t]).reshape(-1))
+        outs[mode] = np.concatenate([np.asarray(x).reshape(-1) for x in lgs])
+        if mode == "sharing":
+            st = be.kv.stats()
+            # v1 aliases base whole (10); v2 its first two pages (8).  A
+            # prompt diverging INSIDE the partial page's written tokens
+            # would alias only the full pages (a page is aliased as a
+            # unit); v1 instead extends base, so its divergence starts at
+            # base's end and its first write COWs the shared partial page.
+            assert st["prefix_hit_tokens"] == 10 + 8
+            assert st["cow_copies"] >= 1
+            assert st["aliased_page_fraction"] > 0
+        elif mode == "plain":
+            st = be.kv.stats()
+            assert st["prefix_hit_tokens"] == 0 and st["cow_copies"] == 0
+    np.testing.assert_allclose(outs["sharing"], outs["plain"], atol=1e-4)
+    np.testing.assert_allclose(outs["sharing"], outs["dense"], atol=1e-4)
+
+
+def test_identical_prompt_aliases_whole_prefix(setup):
+    """Length-0 divergence: an identical prompt aliases every page (full
+    pages AND the trailing partial), re-prefills nothing but the final
+    token's logits, and pays its first COW only when decode appends into
+    the shared partial page.  Logits stay equal to the unshared run."""
+    m, params = setup
+    rng = np.random.default_rng(11)
+    pa = rng.integers(0, 128, 10)
+    teacher = rng.integers(0, 128, (3, 2))
+    runs = {}
+    for sharing in (True, False):
+        be = DenseBackend(m, params, paged=True, page_size=4,
+                          prefill_chunk=4, prefix_sharing=sharing)
+        be.start_batch(2, 32)
+        for s in range(2):
+            be.release(s)
+        lg0, lg1 = be.join(0, pa), be.join(1, pa)
+        np.testing.assert_allclose(lg0, lg1, atol=1e-5)
+        if sharing:
+            assert be.kv.stats()["prefix_hit_tokens"] == len(pa)
+            assert be.kv.pages_used == 3        # not 6: all 3 pages shared
+            assert be.kv.aliased_pages == 3
+        steps = [be.step(teacher[t]) for t in range(3)]
+        if sharing:
+            # both slots' first append hits the shared partial page: one
+            # COW (the other writer is by then the sole referent)
+            assert be.kv.stats()["cow_copies"] == 1
+        runs[sharing] = np.stack([np.asarray(s) for s in steps])
+    np.testing.assert_allclose(runs[True], runs[False], atol=1e-4)
+
+
+def test_prefix_sharing_pallas_kernel_parity(setup, monkeypatch):
+    """Decode through the Pallas paged flash kernel over *aliased* page
+    tables (two slots pointing at shared physical pages) matches the XLA
+    gather path step for step — sharing needs no kernel changes."""
+    m, params = setup
+    rng = np.random.default_rng(12)
+    pa = rng.integers(0, 128, 9)
+    pb = np.concatenate([pa[:8], [(pa[8] + 1) % 128], rng.integers(0, 128, 2)])
+    teacher = rng.integers(0, 128, (3, 2))
+    outs = {}
+    for mode in ("xla", "pallas"):
+        monkeypatch.setenv("REPRO_KERNEL_MODE", mode)
+        be = _mk("hobbit", m, params, paged=True, page_size=4,
+                 prefill_chunk=5)
+        be.start_batch(2, 32)
+        for s in range(2):
+            be.release(s)
+        lgs = [be.join(0, pa), be.join(1, pb)]
+        for t in range(3):
+            lgs.append(be.step(teacher[t]).reshape(-1))
+        outs[mode] = np.concatenate([np.asarray(x).reshape(-1) for x in lgs])
+        st = be.engine.stats()
+        assert st["prefix_hit_tokens"] > 0, "workload must actually share"
+        if mode == "pallas":
+            disp = st["kernel_dispatch"]
+            assert disp.get("paged_flash_decode.pallas_interpret", 0) > 0
+    np.testing.assert_allclose(outs["pallas"], outs["xla"], atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["dense", "hobbit"])
+def test_scheduler_shared_prefix_outputs_unchanged(setup, kind):
+    """Continuous batching with a common system prompt: every request's
+    output equals its isolated dense run whether sharing is on or off, and
+    the sharing run reports prefix hits (admit_k=1 so each prompt is in
+    the trie before the next admission matches it)."""
+    m, params = setup
+    rng = np.random.default_rng(13)
+    sys_prompt = rng.integers(0, 128, 8)
+    prompts = [np.concatenate([sys_prompt, rng.integers(0, 128, 3 + i)])
+               for i in range(3)]
+    for sharing in (True, False):
+        be = _mk(kind, m, params, paged=True, page_size=4, prefill_chunk=4)
+        if kind == "dense":
+            be.prefix_sharing = sharing
+        else:
+            be.engine.ecfg = dataclasses.replace(
+                be.engine.ecfg, prefix_sharing=sharing)
+        srv = BatchingServer(be, max_batch=3, max_len=32, admit_k=1)
+        for i, p in enumerate(prompts):
+            srv.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+        srv.run()
+        assert len(srv.completed) == 3
+        hits = srv.stats()["backend"].get("prefix_hit_tokens", 0)
+        assert (hits >= 2 * len(sys_prompt)) == sharing
+        for i, p in enumerate(prompts):
+            got = next(r for r in srv.completed if r.rid == i)
+            want = generate(_mk(kind, m, params, paged=False), p[None], 4,
+                            max_len=32)
+            np.testing.assert_array_equal(got.output,
+                                          want.tokens[0, len(p):])
+
+
+def test_second_release_of_shared_slot_is_noop(setup):
+    """Model-level double release: releasing a retired slot again must not
+    free a sharer's still-referenced pages out from under it (the logits of
+    the surviving slot are unchanged afterwards)."""
+    m, params = setup
+    rng = np.random.default_rng(14)
+    pa = rng.integers(0, 128, 9)
+    be = DenseBackend(m, params, paged=True, page_size=4, prefill_chunk=4)
+    be.start_batch(2, 32)
+    for s in range(2):
+        be.release(s)
+    be.join(0, pa)
+    lg1 = be.join(1, pa)                # aliases slot 0's pages
+    be.release(0)
+    used = be.kv.pages_used
+    before = be.kv.refcount.copy()
+    be.release(0)                       # double release: clean no-op
+    assert be.kv.pages_used == used
+    np.testing.assert_array_equal(be.kv.refcount, before)
+    # the sharer still decodes correctly over its (now exclusive) pages
+    toks = [int(np.argmax(lg1))]
+    vec = np.zeros((2,), np.int32)
+    for _ in range(3):
+        vec[1] = toks[-1]
+        lg = be.step(vec)
+        toks.append(int(np.argmax(lg[1])))
+    want = generate(DenseBackend(m, params), pa[None], 4, max_len=32)
+    np.testing.assert_array_equal(np.asarray(toks, np.int32),
+                                  want.tokens[0, len(pa):])
+
+
 def test_backend_stats_have_kv_fields(setup):
     """kv_pages_used / kv_pages_total / kv_page_fraction are part of the
     uniform stats contract on both layouts (zeros when dense)."""

@@ -1,0 +1,447 @@
+"""Property-based paging suite: random interleavings of admit /
+fork-with-shared-prefix / decode / release driven through BOTH the real
+``PagedKVPool`` and a pure-python reference pool (same sharing semantics,
+implemented over path-keyed dicts instead of a linked radix trie), asserting
+after every operation that
+
+  * ``refcount[p]`` equals the number of slot tables referencing page ``p``
+    (and, for trie-registered pages, the node's ref-set size),
+  * the free list is duplicate-free, disjoint from every referenced page,
+    and together with the referenced pages partitions the pool (no leaks),
+  * outstanding reservations plus pending copy-on-write debt never exceed
+    the free list (the no-deadlock guarantee: a properly admitted slot can
+    always draw its promised pages and fund its COWs),
+  * releasing a slot returns exactly its exclusively-owned pages, and a
+    second ``release`` of the same slot is a clean no-op,
+
+plus differential checks against the reference (free-page count, matched
+prefix lengths, admission verdicts, COW copy counts).
+
+The hypothesis test shrinks failures to minimal op sequences; the scripted
+and pseudo-random tests below run the same interpreter deterministically so
+the invariant machinery is exercised even where hypothesis is absent.
+"""
+
+import os
+
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    # >= 200 random interleavings locally; a lighter profile under CI where
+    # the suite runs on every push (tier-1 --timeout guard)
+    settings.register_profile("paged_local", max_examples=200, deadline=None)
+    settings.register_profile("paged_ci", max_examples=60, deadline=None)
+    settings.load_profile("paged_ci" if os.environ.get("CI") else
+                          "paged_local")
+except ImportError:  # property tests collect-and-skip without hypothesis
+    from conftest import hypothesis_stubs
+    given, settings, st = hypothesis_stubs()
+
+from repro.models.kv_pages import PagedKVPool
+
+PSZ = 4         # tokens per page
+NPAGES = 16
+BATCH = 5
+MAXP = 6        # page-table width -> 24-token per-slot ceiling
+MAXTOK = MAXP * PSZ
+CHUNK = 3       # prefill chunk; not page-aligned so chunks cross pages
+
+
+def _prompt(seed: int, length: int):
+    """Deterministic prompt; tiny vocab so accidental shared prefixes (and
+    trie collisions between unrelated prompts) actually occur."""
+    return [int(x) for x in
+            np.random.default_rng(seed).integers(0, 7, length)]
+
+
+# --------------------------------------------------------------- reference
+class RefPool:
+    """Pure-python reference for the sharing/COW/reservation semantics.
+
+    Same rules as ``PagedKVPool`` but a different implementation: nodes are
+    keyed by their page-content *path* in flat dicts (no parent/child links,
+    no physical page ids — pages are counted, not named), so structural bugs
+    in the real pool's trie linkage, pruning, refcounting or debt accounting
+    show up as divergence rather than being mirrored."""
+
+    def __init__(self, sharing: bool = True):
+        self.sharing = sharing
+        self.free = NPAGES
+        self.reserved = [0] * BATCH
+        self.npages = [0] * BATCH               # logical pages per slot
+        self.keys = [dict() for _ in range(BATCH)]  # li -> node key
+        # full node key: ("F", path); partial key: ("P", path, content)
+        # where path is a tuple of full-page content tuples
+        self.refs = {}                          # key -> set of slots
+        self.partial = {}                       # path -> [contents] in
+        #                                         registration order
+        self.hit_tokens = 0
+        self.cow_copies = 0
+
+    def debt(self) -> int:
+        return sum(max(0, len(s) - 1)
+                   for k, s in self.refs.items() if k[0] == "P")
+
+    def reservable(self) -> int:
+        return self.free - sum(self.reserved) - self.debt()
+
+    def _match(self, prompt):
+        L, path, off, chain = len(prompt), (), 0, []
+        while L - off >= PSZ:
+            c = tuple(prompt[off:off + PSZ])
+            if ("F", path + (c,)) not in self.refs:
+                break
+            path += (c,)
+            chain.append(("F", path))
+            off += PSZ
+        best, bestk = None, 0
+        for c in self.partial.get(path, []):    # registration order: the
+            k = min(len(c), L - off)            # same tie-break as the pool
+            if k > bestk and c[:k] == tuple(prompt[off:off + k]):
+                best, bestk = ("P", path, c), k
+        return chain, best, off, bestk
+
+    def _plan(self, tokens, prompt):
+        need = -(-tokens // PSZ)
+        chain, best, off, bestk = self._match(prompt)
+        plans = []
+        if best is not None and bestk > 0:
+            plans.append((chain + [best], off + bestk, 1))
+        if chain:
+            plans.append((list(chain), off, 0))
+        for keys, matched, dbt in plans:
+            if len(keys) > need:
+                continue
+            if (need - len(keys)) + dbt <= self.reservable():
+                return keys, matched, need - len(keys)
+        return None
+
+    def can_admit(self, tokens, prompt) -> bool:
+        need = -(-tokens // PSZ)
+        if need > min(MAXP, NPAGES):
+            return False
+        if need <= self.reservable():
+            return True
+        if not (self.sharing and prompt is not None):
+            return False
+        return self._plan(tokens, list(prompt)) is not None
+
+    def reserve(self, slot, tokens, prompt) -> int:
+        need = -(-tokens // PSZ)
+        if self.sharing and prompt is not None and self.npages[slot] == 0:
+            plan = self._plan(tokens, list(prompt))
+            if plan is not None:
+                keys, matched, extra = plan
+                for li, key in enumerate(keys):
+                    self.refs[key].add(slot)
+                    self.keys[slot][li] = key
+                self.npages[slot] = len(keys)
+                self.reserved[slot] = extra
+                self.hit_tokens += matched
+                return matched
+        self.reserved[slot] = max(self.reserved[slot],
+                                  need - self.npages[slot])
+        return 0
+
+    def ensure(self, slot, length):
+        target = -(-length // PSZ)
+        while self.npages[slot] < target:
+            self.free -= 1
+            self.npages[slot] += 1
+            if self.reserved[slot] > 0:
+                self.reserved[slot] -= 1
+
+    def _drop_ref(self, key, slot):
+        s = self.refs[key]
+        s.discard(slot)
+        if not s:
+            del self.refs[key]
+            if key[0] == "P":
+                self.partial[key[1]].remove(key[2])
+
+    def make_writable(self, slot, start, end):
+        if not self.sharing or start >= end:
+            return
+        for li in range(start // PSZ, (end - 1) // PSZ + 1):
+            if li >= self.npages[slot]:
+                break
+            key = self.keys[slot].get(li)
+            if key is None:
+                continue
+            recorded = len(key[2]) if key[0] == "P" else PSZ
+            if len(self.refs[key]) > 1:         # shared: copy-on-write
+                self.free -= 1
+                self.cow_copies += 1
+            elif max(start, li * PSZ) - li * PSZ >= recorded:
+                continue    # sole-owner append past the record: stays shared
+            self._drop_ref(key, slot)           # overlap: detach the record
+            del self.keys[slot][li]
+
+    def register(self, slot, prompt):
+        if not self.sharing:
+            return
+        prompt, path = list(prompt), ()
+        L = len(prompt)
+        for i in range(L // PSZ):
+            c = tuple(prompt[i * PSZ:(i + 1) * PSZ])
+            key = ("F", path + (c,))
+            if key in self.refs:
+                if self.keys[slot].get(i) != key:
+                    return      # duplicate content registered first
+            else:
+                if self.keys[slot].get(i) is not None:
+                    return      # own page indexed under other content
+                self.refs[key] = {slot}
+                self.keys[slot][i] = key
+            path += (c,)
+        rem = L % PSZ
+        if rem == 0:
+            return
+        li = L // PSZ
+        if self.keys[slot].get(li) is not None:
+            return              # trailing page is itself an alias
+        c = tuple(prompt[L - rem:])
+        if c in self.partial.get(path, []):
+            return              # identical partial already registered
+        self.refs[("P", path, c)] = {slot}
+        self.partial.setdefault(path, []).append(c)
+        self.keys[slot][li] = ("P", path, c)
+
+    def release(self, slot):
+        freed = 0
+        for li in range(self.npages[slot]):
+            key = self.keys[slot].get(li)
+            if key is None or len(self.refs[key]) == 1:
+                freed += 1      # exclusively owned -> back to the free list
+        for key in list(self.keys[slot].values()):
+            self._drop_ref(key, slot)
+        self.keys[slot] = {}
+        self.free += freed
+        self.npages[slot] = 0
+        self.reserved[slot] = 0
+
+
+# ------------------------------------------------------------------ driver
+class Driver:
+    """Runs the real pool and the reference in lockstep, checking every
+    invariant after every pool call (not just per high-level op)."""
+
+    def __init__(self, sharing: bool = True):
+        self.pool = PagedKVPool(
+            num_layers=1, num_kv_heads=1, head_dim=2, dtype="float32",
+            num_pages=NPAGES, page_size=PSZ, max_pages_per_slot=MAXP,
+            prefix_sharing=sharing)
+        self.pool.start(BATCH)
+        self.ref = RefPool(sharing)
+        self.live = {}          # slot -> [prompt, current_len, token_budget]
+        self.history = []       # prompts seen, for fork prefixes
+
+    def check(self):
+        pool, ref = self.pool, self.ref
+        # 1) refcount[p] == number of slot-table references to p; the
+        #    exported table rows mirror the owned lists; registered pages'
+        #    refcount equals their trie node's ref-set size
+        counts = np.zeros(NPAGES, np.int64)
+        for own in pool.owned:
+            for pid in own:
+                counts[pid] += 1
+        np.testing.assert_array_equal(pool.refcount, counts)
+        for s, own in enumerate(pool.owned):
+            np.testing.assert_array_equal(pool.table[s, :len(own)], own)
+        for pid, node in pool._page_node.items():
+            assert node.page == pid
+            assert pool.refcount[pid] == len(node.refs)
+        # 2) free list: duplicate-free, disjoint from referenced pages, and
+        #    together they partition the pool (no leaked pages)
+        free = set(pool.free)
+        assert len(free) == len(pool.free)
+        referenced = {pid for own in pool.owned for pid in own}
+        assert not free & referenced
+        assert free | referenced == set(range(NPAGES))
+        # 3) promises + pending COW debt never exceed the free list, and
+        #    cow_debt matches its definition (one per extra sharer of each
+        #    shared partial page)
+        debt = sum(max(0, len(n.refs) - 1)
+                   for n in set(pool._page_node.values())
+                   if len(n.tokens) < PSZ)
+        assert pool.cow_debt == debt
+        assert int(pool.reserved.sum()) + pool.cow_debt <= len(pool.free)
+        # differential: the independent reference agrees exactly
+        assert len(pool.free) == ref.free
+        assert pool.cow_copies == ref.cow_copies
+        assert pool.prefix_hit_tokens == ref.hit_tokens
+        assert [len(o) for o in pool.owned] == ref.npages
+        assert [int(r) for r in pool.reserved] == ref.reserved
+
+    def admit(self, prompt, new_tokens: int):
+        free_slots = [s for s in range(BATCH) if s not in self.live]
+        if not free_slots or not prompt:
+            return
+        slot = free_slots[0]
+        need = len(prompt) + new_tokens + 1
+        parr = np.asarray(prompt, np.int32)
+        ok = self.pool.can_reserve(need, prompt=parr)
+        assert ok == self.ref.can_admit(need, prompt)
+        if not ok:
+            return
+        matched = self.pool.reserve(slot, need, prompt=parr)
+        assert matched == self.ref.reserve(slot, need, prompt)
+        self.check()
+        # chunked prefill: resume at the matched length (re-feeding at least
+        # the last prompt token), write floor at the matched length
+        ws = matched
+        fed = min(matched, len(prompt) - 1)
+        while fed < len(prompt):
+            n = min(CHUNK, len(prompt) - fed)
+            self.pool.ensure(slot, fed + n)
+            self.ref.ensure(slot, fed + n)
+            self.pool.make_writable(slot, max(fed, ws), fed + n)
+            self.ref.make_writable(slot, max(fed, ws), fed + n)
+            fed += n
+            self.check()
+        self.pool.register_prefix(slot, parr)
+        self.ref.register(slot, prompt)
+        self.live[slot] = [list(prompt), len(prompt), need]
+        self.history.append(list(prompt))
+        self.check()
+
+    def decode(self, pick: int):
+        if not self.live:
+            return
+        slot = sorted(self.live)[pick % len(self.live)]
+        _, length, budget = self.live[slot]
+        if length + 1 > budget:
+            return
+        self.pool.ensure(slot, length + 1)
+        self.ref.ensure(slot, length + 1)
+        self.pool.make_writable(slot, length, length + 1)
+        self.ref.make_writable(slot, length, length + 1)
+        self.live[slot][1] = length + 1
+        self.check()
+
+    def release(self, pick: int, double: bool = False):
+        if not self.live:
+            return
+        slot = sorted(self.live)[pick % len(self.live)]
+        exclusive = [pid for pid in self.pool.owned[slot]
+                     if self.pool.refcount[pid] == 1]
+        self.pool.release(slot)
+        self.ref.release(slot)
+        del self.live[slot]
+        # 4) every exclusively-owned page came back to the free list
+        assert set(exclusive) <= set(self.pool.free)
+        self.check()
+        if double:
+            snap = self._snapshot()
+            self.pool.release(slot)             # second release: clean no-op
+            assert self._snapshot() == snap
+            self.check()
+
+    def _snapshot(self):
+        p = self.pool
+        return (sorted(p.free), p.refcount.tolist(),
+                [list(o) for o in p.owned], p.reserved.tolist(),
+                p.cow_debt, p.cow_copies, p.prefix_hit_tokens)
+
+
+def _run_ops(ops, sharing: bool):
+    """Interpret an abstract op stream (opcode + 3 raw ints, mapped onto the
+    current driver state) — shared by the hypothesis and scripted tests."""
+    d = Driver(sharing)
+    for op, a, b, c in ops:
+        if op == "admit":
+            plen = 1 + a % 18
+            d.admit(_prompt(b, plen), c % max(1, MAXTOK - plen - 1))
+        elif op == "fork":
+            if d.history:
+                base = d.history[a % len(d.history)]
+                cut = b % (len(base) + 1)
+                p = (base[:cut] + _prompt(b + 1, 1 + c % 8))[:MAXTOK - 4]
+                d.admit(p, 3)
+        elif op == "decode":
+            d.decode(a)
+        elif op == "release":
+            d.release(a)
+        else:                   # double_release
+            d.release(a, double=True)
+    # drain: every release path (shared and exclusive pages) re-checked
+    for pick in [0] * len(d.live):
+        d.release(pick, double=True)
+    assert d.pool.pages_used == 0 and d.ref.free == NPAGES
+    return d
+
+
+_OPS = st.lists(
+    st.tuples(
+        st.sampled_from(["admit", "fork", "decode", "release",
+                         "double_release"]),
+        st.integers(0, 2 ** 16), st.integers(0, 2 ** 16),
+        st.integers(0, 2 ** 16)),
+    min_size=1, max_size=30)
+
+
+@given(ops=_OPS, sharing=st.booleans())
+def test_random_interleavings_hold_pool_invariants(ops, sharing):
+    """Hypothesis-shrunk random interleavings of admit / fork / decode /
+    release keep every pool invariant and track the reference exactly."""
+    _run_ops(ops, sharing)
+
+
+def test_pseudorandom_interleavings_deterministic():
+    """The same interpreter over numpy-generated op streams: deterministic
+    coverage of the property (runs even where hypothesis is absent)."""
+    names = ["admit", "fork", "decode", "release", "double_release"]
+    for seed in range(30):
+        rng = np.random.default_rng(seed)
+        ops = [(names[int(rng.integers(0, 5))], int(rng.integers(0, 2**16)),
+                int(rng.integers(0, 2**16)), int(rng.integers(0, 2**16)))
+               for _ in range(25)]
+        _run_ops(ops, sharing=bool(seed % 2 == 0))
+
+
+def test_scripted_shared_prefix_lifecycle():
+    """Deterministic end-to-end: register, alias (identical + divergent
+    fork), COW on divergence and on decode-into-partial, donor released
+    before sharer, everything drained."""
+    d = Driver(True)
+    base = _prompt(1, 14)               # 3 full pages + 2-token partial
+    d.admit(base, 4)
+    assert d.pool.prefix_hit_tokens == 0
+    d.admit(list(base), 4)              # identical prompt: length-0
+    hit = d.pool.prefix_hit_tokens      # divergence, full 14-token alias
+    assert hit == 14 and d.pool.cow_copies == 0
+    assert d.pool.aliased_pages == 4
+    d.admit(base[:9] + _prompt(2, 5), 4)    # diverges mid-page 3: aliases
+    assert d.pool.prefix_hit_tokens == hit + 8  # 2 full pages only
+    d.decode(0)                         # base writes token 14 into the
+    assert d.pool.cow_copies == 1       # shared partial page -> COW
+    d.release(0)                        # donor gone; sharers keep pages
+    assert d.pool.aliased_pages > 0
+    for _ in range(len(d.live)):
+        d.release(0, double=True)
+    assert d.pool.pages_used == 0
+
+
+def test_second_release_is_clean_noop():
+    """Releasing an already-released slot must not decrement refcounts
+    again, re-free pages, or disturb other slots (the double-free class)."""
+    d = Driver(True)
+    d.admit(_prompt(3, 10), 4)
+    d.admit(_prompt(3, 10), 4)          # aliases slot 0's pages
+    d.release(0, double=True)           # donor released twice
+    d.release(0, double=True)           # sharer released twice
+    assert d.pool.pages_used == 0
+    # never-admitted slot: also a no-op
+    snap = d._snapshot()
+    d.pool.release(BATCH - 1)
+    assert d._snapshot() == snap
+
+
+def test_sharing_disabled_never_aliases():
+    """prefix_sharing=False: no matches, no COWs, zero sharing stats, and
+    the reference agrees on plain reservation arithmetic."""
+    d = _run_ops([("admit", i, 3, 4) for i in range(4)] +
+                 [("fork", 0, 2, 2), ("decode", 0, 0, 0)], sharing=False)
+    assert d.pool.prefix_hit_tokens == 0 and d.pool.cow_copies == 0
+    assert d.pool.aliased_pages == 0

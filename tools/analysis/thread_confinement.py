@@ -40,6 +40,9 @@ DEFAULT_FILES = (
     "src/repro/core/loader.py",
     "src/repro/core/cache.py",
     "src/repro/core/engine.py",
+    # the paged-KV pool's sharing metadata (refcounts, free list, radix
+    # trie, COW debt) is main-thread-owned exactly like the expert cache's
+    "src/repro/models/kv_pages.py",
 )
 
 # container methods that mutate the receiver in place
