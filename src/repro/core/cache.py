@@ -56,6 +56,9 @@ class CacheStats:
     misses_hi: int = 0
     misses_lo: int = 0
     evictions: int = 0
+    # hits on experts this sequence had never touched but the fleet heat map
+    # already knew were hot — the cross-request prior paying off
+    fleet_heat_hits: int = 0
 
     @property
     def hits(self):
@@ -80,6 +83,7 @@ class CacheStats:
             "misses_hi": self.misses_hi, "misses_lo": self.misses_lo,
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "hit_ratio": self.hit_ratio(),
+            "fleet_heat_hits": self.fleet_heat_hits,
         }
 
 
@@ -112,11 +116,18 @@ class MultidimensionalCache:
     """Two pools + shared policy records + prediction pin set."""
 
     def __init__(self, num_layers: int, hi_slots: int, lo_slots: int,
-                 weights: PolicyWeights = MULTIDIM):
+                 weights: PolicyWeights = MULTIDIM, *, fleet=None,
+                 fleet_weight: float = 0.25):
+        """fleet: optional ``core.fleet_heat.FleetHeat`` — a cross-request
+        expert heat prior blended into every Eq. 3 priority with weight
+        `fleet_weight` (see ``priority``).  None reproduces the pure
+        per-sequence policy bit-for-bit."""
         self.records = PolicyRecords(num_layers)
         self.hi = PrecisionPool(hi_slots)
         self.lo = PrecisionPool(lo_slots)
         self.weights = weights
+        self.fleet = fleet
+        self.fleet_weight = float(fleet_weight)
         self.pinned: Set[Tuple[ExpertKey, bool]] = set()  # (key, is_hi)
         self.hard_pinned: Set[Tuple[ExpertKey, bool]] = set()
         # async-load reservations: (key, is_hi) -> slot.  The entry already
@@ -209,7 +220,26 @@ class MultidimensionalCache:
             victim = self._select_victim(pool, high_precision, current_layer)
         except CacheStarvation:
             return None
-        return self.records.priority(victim, self.weights, current_layer)
+        return self.priority(victim, current_layer)
+
+    # ------------- priority (Eq. 3 + fleet prior) -------------
+    def priority(self, key: ExpertKey, current_layer: int) -> float:
+        """THE cache priority: the per-sequence Eq. 3 score, blended with
+        the fleet-wide heat prior when one is attached::
+
+            p = (1 - w) * eq3(key) + w * fleet.score(key)
+
+        Every consumer — ``_select_victim``, ``peek_victim_priority`` and
+        the upgrade passes in core/loader.py and core/simulator.py — ranks
+        experts through this method, so a fleet-hot expert is harder to
+        evict and upgraded sooner even before the current sequence touches
+        it.  Without a fleet (fleet=None) this is exactly
+        ``records.priority``."""
+        p = self.records.priority(key, self.weights, current_layer)
+        if self.fleet is None:
+            return p
+        w = self.fleet_weight
+        return (1.0 - w) * p + w * self.fleet.score(key)
 
     # ------------- queries -------------
     def lookup(self, key: ExpertKey, high_precision: bool) -> Optional[int]:
@@ -233,6 +263,11 @@ class MultidimensionalCache:
                 else:
                     self.stats.misses_lo += 1
         if slot is not None:
+            if (count_stats and self.fleet is not None
+                    and self.records.freq.get(key, 0) == 0
+                    and self.fleet.is_warm(key)):
+                # first touch this sequence, but the fleet kept it resident
+                self.stats.fleet_heat_hits += 1
             self.records.on_use(key, high_precision)
         return slot
 
@@ -266,7 +301,7 @@ class MultidimensionalCache:
         for key in pool.slot_of:
             if (key, is_hi) in self.pinned or (key, is_hi) in self.inflight:
                 continue
-            p = self.records.priority(key, self.weights, current_layer)
+            p = self.priority(key, current_layer)
             if p < best_p:
                 best_key, best_p = key, p
         if best_key is None:
@@ -286,8 +321,8 @@ class MultidimensionalCache:
                 raise CacheStarvation(
                     f"{'hi' if is_hi else 'lo'} pool: every resident expert "
                     "has an async load in flight; drain the scheduler first")
-            best_key = min(cands, key=lambda k: self.records.priority(
-                k, self.weights, current_layer))
+            best_key = min(cands, key=lambda k: self.priority(
+                k, current_layer))
         return best_key
 
     # ------------- views -------------

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.cache import MultidimensionalCache
+from repro.core.fleet_heat import FleetHeat
 from repro.core.loader import (ON_DEMAND, DynamicExpertLoader, LoadTask,
                                StagingEngine, measure_link_bps)
 from repro.core.policies import MULTIDIM, PolicyWeights
@@ -164,8 +165,12 @@ class OffloadEngine:
 
         # ---- manager / loader / predictor ----
         # owner: main-thread
+        # fleet heat is engine-lifetime (survives cache.new_sequence()): the
+        # cross-request expert prior blended into the Eq. 3 cache priorities
+        self.fleet = FleetHeat()
         self.cache = MultidimensionalCache(self.num_moe_layers, ecfg.hi_slots,
-                                           ecfg.lo_slots, ecfg.policy)
+                                           ecfg.lo_slots, ecfg.policy,
+                                           fleet=self.fleet)
         hi_b = expert_nbytes(d, f, 16)
         lo_b = expert_nbytes(d, f, ecfg.lo_bits, group_size=ecfg.group_size)
         self.expert_bytes = {PREC_HI: hi_b, PREC_LO: lo_b}
@@ -180,7 +185,7 @@ class OffloadEngine:
             streams=ecfg.streams, ordered=ecfg.ordered, link_bps=link_bps,
             emulate_link=ecfg.link_gbps is not None, upgrade=ecfg.upgrade)
         self.predictor = AdaptiveExpertPredictor(
-            self.routers, mc.top_k, p=ecfg.prefetch_p)
+            self.routers, mc.top_k, p=ecfg.prefetch_p, fleet=self.fleet)
 
         # pending predictions: (Prediction, made_at_layer, batch_slot)
         self._pending_preds: List = []
@@ -199,6 +204,7 @@ class OffloadEngine:
         self.kv_pool = None             # PagedKVPool when ecfg.paged_kv
         self._admission = None          # ChunkedPrefill when ecfg.paged_kv
         self._pending_joins = {}        # dense-path incremental admissions
+        self._unclaimed_joins = {}      # finished during a blocking join()
 
     # ------------------------------------------------------------------
     # device transfer
@@ -492,6 +498,7 @@ class OffloadEngine:
         self.trace = []
         self._pending_preds = []        # (Prediction, made_at_layer, slot)
         self._pending_joins = {}        # abandoned admissions don't leak
+        self._unclaimed_joins = {}
 
     def start_sequence(self, max_len: int, batch: int = 1):
         self.start_batch(batch, max_len)
@@ -549,23 +556,19 @@ class OffloadEngine:
         return np.asarray(logits, np.float32)
 
     def join(self, slot: int, prompt) -> np.ndarray:
-        """Admit one request into a free slot mid-flight (blocking): batch=1
-        prefill, KV written into the slot's cache rows (dense) or its pages
-        (paged).  Returns logits (V,)."""
+        """Admit one request into a free slot mid-flight (blocking).  This is
+        a documented thin wrapper over ``join_begin``/``join_step`` — the ONE
+        blocking-join implementation lives in ``serving.api._blocking_join``
+        and is shared by every backend.  Returns logits (V,)."""
         self._check_open()
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
         assert 0 <= slot < self.batch, (slot, self.batch)
-        if self.ecfg.paged_kv:
-            # concurrently pending join_begin admissions advance alongside;
-            # their finished logits stay claimable by the next join_step
-            lg = self._admission.run(slot, prompt,
-                                     reserve_tokens=self.max_len)
-            self.positions = self.positions.at[slot].set(
-                int(self.kv_pool.lens[slot]))
-            self.active[slot] = True
-            self._pending_preds = [pp for pp in self._pending_preds
-                                   if pp[2] != slot]
-            return lg
+        from repro.serving.api import _blocking_join
+        return _blocking_join(self, slot, prompt)
+
+    def _join_dense(self, slot: int, prompt) -> np.ndarray:
+        """Dense-KV one-shot admission body: batch=1 prefill, KV scattered
+        into the slot's cache rows.  Called from join_step."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
         batch = Batch(tokens=jnp.asarray(prompt[None]),
                       loss_mask=jnp.ones((1, len(prompt)), jnp.float32))
         logits, cache, positions = self._prefill_fn()(self.params, batch)
@@ -596,9 +599,12 @@ class OffloadEngine:
     def join_step(self) -> Dict[int, np.ndarray]:
         """Advance every in-progress admission one prefill chunk (ONE shared
         jitted call under paged KV); completed slots become active.  Returns
-        {slot: last-token logits}."""
+        {slot: last-token logits} — including logits another slot's blocking
+        ``join`` finished but did not claim."""
+        done: Dict[int, np.ndarray] = dict(self._unclaimed_joins)
+        self._unclaimed_joins = {}
         if self.ecfg.paged_kv:
-            done = self._admission.step()
+            done.update(self._admission.step())
             for slot in done:
                 plen = int(self.kv_pool.lens[slot])
                 self.positions = self.positions.at[slot].set(plen)
@@ -606,13 +612,12 @@ class OffloadEngine:
                 self._pending_preds = [pp for pp in self._pending_preds
                                        if pp[2] != slot]
             return done
-        done = {}
         for slot, prompt in list(self._pending_joins.items()):
             del self._pending_joins[slot]
-            done[slot] = self.join(slot, prompt)
+            done[slot] = self._join_dense(slot, prompt)
         return done
 
-    def can_admit(self, tokens: int, prompt=None) -> bool:
+    def can_admit(self, tokens: int, *, prompt=None) -> bool:
         """KV-capacity admission gate: paged KV checks unreserved pages
         (with `prompt`, net of the best prefix-sharing plan — aliased
         prefix pages cost nothing); dense KV always admits (slots are
@@ -623,12 +628,54 @@ class OffloadEngine:
 
     def release(self, slot: int):
         """Free a slot (its KV rows become junk until the next join; paged
-        KV returns the slot's pages to the pool)."""
+        KV returns the slot's pages to the pool).  Retires the request from
+        the fleet heat map (one decay tick — the cross-request prior ages
+        by requests, not wall clock)."""
         self.active[slot] = False
         self._pending_preds = [pp for pp in self._pending_preds
                                if pp[2] != slot]
         if self.ecfg.paged_kv and self.kv_pool is not None:
             self.kv_pool.release(slot)
+        self.fleet.retire_request()
+
+    def pause(self, slot: int) -> Dict:
+        """Preempt `slot` mid-decode: snapshot its KV state to host, then
+        free the slot (paged KV returns its pages to the pool — the
+        snapshot is taken FIRST, so aliased prefix pages are copied out
+        while the remaining sharers keep the originals and their
+        refcounts).  Returns the opaque snapshot for ``resume``.  The
+        expert cache is untouched: it is shared, and the fleet heat map
+        keeps the victim's experts warm for its return."""
+        self._check_open()
+        pos = int(np.asarray(self.positions)[slot])
+        self._pending_preds = [pp for pp in self._pending_preds
+                               if pp[2] != slot]
+        if self.ecfg.paged_kv and self.kv_pool is not None:
+            snap = self.kv_pool.snapshot_slot(slot)
+            self.kv_pool.release(slot)
+            self.active[slot] = False
+            return {"layout": "paged", "position": pos, "kv": snap}
+        rows = [{"k": np.asarray(c["k"][slot]), "v": np.asarray(c["v"][slot])}
+                for c in self.kv_cache]
+        self.active[slot] = False
+        return {"layout": "dense", "position": pos, "cache": rows}
+
+    def resume(self, slot: int, snapshot: Dict) -> None:
+        """Reinstate a paused request into (a possibly different) `slot`
+        from its ``pause`` snapshot; decode continues logits-identically.
+        Paged KV raises PagePoolExhausted when the pool cannot host the
+        snapshot right now (the scheduler keeps it and retries)."""
+        self._check_open()
+        if snapshot["layout"] == "paged":
+            self.kv_pool.restore_slot(slot, snapshot["kv"])
+        else:
+            for li, row in enumerate(snapshot["cache"]):
+                c = self.kv_cache[li]
+                self.kv_cache[li] = {
+                    "k": c["k"].at[slot].set(jnp.asarray(row["k"])),
+                    "v": c["v"].at[slot].set(jnp.asarray(row["v"]))}
+        self.positions = self.positions.at[slot].set(int(snapshot["position"]))
+        self.active[slot] = True
 
     # ---------------- batched HOBBIT decode ----------------
     def decode_step_batch(self, tokens) -> np.ndarray:
@@ -778,6 +825,8 @@ class OffloadEngine:
             for r in rows:
                 tops[r] = idx_np[r]
                 gates[r] = vals_np[r]
+                for e, g in zip(tops[r], gates[r]):
+                    self.fleet.observe((mi, int(e)), float(g))
 
             self._score_pending_preds(mi, tops)
 
@@ -959,6 +1008,8 @@ class OffloadEngine:
                 probs /= probs.sum()
                 tops[r] = np.argsort(-probs)[: mc.top_k]
                 gates[r] = probs[tops[r]]
+                for e, g in zip(tops[r], gates[r]):
+                    self.fleet.observe((mi, int(e)), float(g))
 
             self._score_pending_preds(mi, tops)
             pred_entry = {}

@@ -641,8 +641,9 @@ class StagingEngine:
             cands.append(key)
         if not cands:
             return
-        prio = lambda k: self.cache.records.priority(  # noqa: E731
-            k, self.cache.weights, self._clock_layer)
+        # fleet-blended cache priority (cache.priority): a fleet-hot expert
+        # is re-promoted before one only this sequence has touched
+        prio = lambda k: self.cache.priority(k, self._clock_layer)  # noqa: E731
         cands.sort(key=lambda k: -prio(k))
         hi_bytes = self.loader.bytes_fn(PREC_HI)
         n_hi = 1 if self.streams == 1 else (self.streams + 1) // 2

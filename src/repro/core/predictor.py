@@ -34,12 +34,21 @@ class AdaptiveExpertPredictor:
     """Holds stacked router weights (L, D, E); predicts future layers' experts."""
 
     def __init__(self, routers: Sequence[np.ndarray], top_k: int,
-                 p: int = 2, mode: str = "auto"):
+                 p: int = 2, mode: str = "auto", *, fleet=None,
+                 fleet_weight: float = 0.0):
+        """fleet: optional ``core.fleet_heat.FleetHeat``.  With
+        fleet_weight > 0, each predicted layer's gate distribution is
+        blended with the fleet's per-layer expert prior
+        (``(1-w)*probs + w*layer_prior``) before the top-k cut, so a fresh
+        request's first prefetches lean on cross-request popularity.  The
+        default weight 0.0 leaves the prediction numerics untouched."""
         self.gates = jnp.asarray(np.stack([np.asarray(r) for r in routers]))
         self.num_layers, self.d_model, self.num_experts = self.gates.shape
         self.top_k = top_k
         self.p = p
         self.mode = mode
+        self.fleet = fleet
+        self.fleet_weight = float(fleet_weight)
         # accuracy bookkeeping: self.eval[d] = (correct_top1, total) for dist d
         self._acc: dict[int, List[int]] = {}
 
@@ -60,9 +69,14 @@ class AdaptiveExpertPredictor:
             / jnp.sum(jnp.exp(logits - jnp.max(logits, -1, keepdims=True)),
                       -1, keepdims=True), axis=1))
         preds = []
+        w = self.fleet_weight if self.fleet is not None else 0.0
         for i, l in enumerate(range(lo, hi + 1)):
-            idx = np.argsort(-probs[i])[: self.top_k]
-            preds.append(Prediction(l, idx.tolist(), probs[i][idx]))
+            pl = probs[i]
+            if w > 0.0:
+                pl = (1.0 - w) * pl + w * self.fleet.layer_prior(
+                    l, self.num_experts)
+            idx = np.argsort(-pl)[: self.top_k]
+            preds.append(Prediction(l, idx.tolist(), pl[idx]))
         return preds
 
     # ---------------- adaptive walk ----------------

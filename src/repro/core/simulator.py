@@ -327,8 +327,9 @@ class OffloadSimulator:
                 self._lo_sub.discard(key)       # hi already resident
                 continue
             cands.append(key)
-        prio = lambda k: self.cache.records.priority(  # noqa: E731
-            k, self.cache.weights, li)
+        # fleet-blended cache priority (cache.priority — identical to the
+        # per-sequence Eq. 3 score when no fleet heat map is attached)
+        prio = lambda k: self.cache.priority(k, li)  # noqa: E731
         cands.sort(key=lambda k: -prio(k))
         for key in cands:
             if max(link_free[s], t) + dur > compute_end:
@@ -363,6 +364,188 @@ def simulate_systems(trace: Trace, num_layers: int, hw: HardwareModel,
     for s in systems:
         out[s] = OffloadSimulator(s, num_layers, hw, cfg).run(trace)
     return out
+
+
+# ----------------------------------------------------------------------
+# serving timeline: SLO scheduling on a deterministic virtual clock
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TimelineConfig:
+    """Virtual-clock serving model for `ServingTimeline` (the scheduling
+    analogue of `HardwareModel`): slot and KV capacity plus throughput
+    knobs, all deterministic, so scheduling policies are compared on an
+    exactly reproducible timeline."""
+    slots: int = 4                     # concurrent serving slots
+    kv_tokens: int = 4096              # total KV token budget (page pool)
+    prefill_tok_s: float = 4096.0      # prefill throughput, tokens/s
+    decode_step_s: float = 0.05        # one decode step (= 1 token/request)
+    policy: str = "slo"                # "fifo" | "slo"
+    aging_s: float = 10.0              # starvation-bounding aging period
+    preempt_margin: float = 1.0        # effective-priority gap to preempt
+
+
+class ServingTimeline:
+    """Deterministic virtual-clock replay of a `serving.workload` trace
+    under one scheduling policy — the simulator half of the live
+    `BatchingServer` (same admission ordering and preemption rule via the
+    shared `serving.workload` policy helpers, same stats keys), used to
+    search scheduling policies and to CI-gate SLO attainment.
+
+    FIFO admits strictly in arrival order with head-of-line blocking (the
+    pre-PR-9 scheduler).  SLO admits in `slo_urgency` order and may
+    preempt: when the most urgent queued request does not fit, the
+    lowest-effective-priority decoding victim whose eviction makes it fit
+    — and whose effective priority trails by more than `preempt_margin` —
+    is paused and requeued (its prefill/decode progress is kept, like the
+    live pause/resume snapshot path).  Aging (one priority level per
+    `aging_s` waited) bounds starvation: a request of priority p waiting
+    `(p_max - p + margin) * aging_s` outranks every fresh arrival, so
+    `starved` counts requests whose admission wait exceeded that bound
+    plus one aging period of slack."""
+
+    def __init__(self, cfg: TimelineConfig):
+        self.cfg = cfg
+
+    def run(self, trace) -> Dict:
+        from repro.serving.workload import effective_priority, slo_urgency
+        cfg = self.cfg
+        reqs = [{
+            "rid": w.rid, "arrival": float(w.arrival_s),
+            "plen": int(len(w.prompt)), "new": int(w.max_new_tokens),
+            "prio": int(w.priority), "ttft": w.ttft_slo_s,
+            "tpot": w.tpot_slo_s,
+            "kv": int(len(w.prompt)) + int(w.max_new_tokens) + 1,
+            "state": "queued", "prefilled": 0, "decoded": 0,
+            "admitted": None, "first": None, "done": None,
+        } for w in trace]
+        order = sorted(range(len(reqs)), key=lambda i: reqs[i]["arrival"])
+        queue: List[int] = []
+        running: List[int] = []
+        kv_used = 0
+        preemptions = 0
+        t, ai, done_n = 0.0, 0, 0
+        tick = cfg.decode_step_s
+
+        def fits(r) -> bool:
+            return (len(running) < cfg.slots
+                    and kv_used + r["kv"] <= cfg.kv_tokens)
+
+        def admit(i: int, now: float):
+            nonlocal kv_used
+            r = reqs[i]
+            if r["admitted"] is None:
+                r["admitted"] = now
+            r["state"] = "decode" if r["prefilled"] >= r["plen"] else "prefill"
+            kv_used += r["kv"]
+            running.append(i)
+
+        for _ in range(1_000_000):
+            if done_n >= len(reqs):
+                break
+            while ai < len(order) and reqs[order[ai]]["arrival"] <= t:
+                queue.append(order[ai])
+                ai += 1
+            if not running and not queue and ai < len(order):
+                t = reqs[order[ai]]["arrival"]      # fast-forward idle time
+                continue
+            # ---- admission ----
+            if cfg.policy == "fifo":
+                queue.sort(key=lambda i: (reqs[i]["arrival"], i))
+                while queue and fits(reqs[queue[0]]):
+                    admit(queue.pop(0), t)          # head-of-line blocking
+            else:
+                queue.sort(key=lambda i: slo_urgency(
+                    reqs[i]["prio"], reqs[i]["arrival"], reqs[i]["ttft"], t,
+                    cfg.aging_s))
+                rest = []
+                for i in queue:
+                    if fits(reqs[i]):
+                        admit(i, t)
+                    else:
+                        rest.append(i)
+                queue = rest
+                if queue:
+                    # preempt-and-requeue for the most urgent non-fitting
+                    # request: lowest-effective-priority decoding victim
+                    # whose slot+pages make it fit, margin-guarded
+                    top = queue[0]
+                    eff = lambda i: effective_priority(  # noqa: E731
+                        reqs[i]["prio"], reqs[i]["arrival"], t, cfg.aging_s)
+                    cands = [i for i in running if reqs[i]["state"] == "decode"]
+                    if cands:
+                        victim = min(cands, key=eff)
+                        v = reqs[victim]
+                        if (eff(victim) + cfg.preempt_margin < eff(top)
+                                and kv_used - v["kv"] + reqs[top]["kv"]
+                                <= cfg.kv_tokens):
+                            running.remove(victim)
+                            kv_used -= v["kv"]
+                            v["state"] = "queued"   # progress kept (snapshot)
+                            queue.append(victim)
+                            preemptions += 1
+                            admit(queue.pop(0), t)
+            # ---- one tick of service ----
+            t_end = t + tick
+            budget = cfg.prefill_tok_s * tick       # prefill tokens this tick
+            for i in list(running):
+                r = reqs[i]
+                if r["state"] == "prefill":
+                    r["prefilled"] = min(r["plen"],
+                                         r["prefilled"] + int(budget))
+                    if r["prefilled"] >= r["plen"]:
+                        # prefill's last-token logits ARE the first token
+                        r["state"] = "decode"
+                        r["first"] = t_end
+                        r["decoded"] = 1
+                elif r["state"] == "decode":
+                    if r["first"] is None:
+                        r["first"] = t_end
+                    r["decoded"] += 1
+                if r["decoded"] >= r["new"]:
+                    r["state"] = "done"
+                    r["done"] = t_end
+                    running.remove(i)
+                    kv_used -= r["kv"]
+                    done_n += 1
+            t = t_end
+
+        # ---- metrics (same keys the live BatchingServer.stats() reports) --
+        p_max = max((r["prio"] for r in reqs), default=0)
+        ttfts, met, declared, starved = [], 0, 0, 0
+        for r in reqs:
+            ttft = (r["first"] - r["arrival"]) if r["first"] is not None \
+                else float("inf")
+            ttfts.append(ttft)
+            wait = (r["admitted"] - r["arrival"]) if r["admitted"] is not None \
+                else float("inf")
+            bound = (p_max - r["prio"] + cfg.preempt_margin + 1) * cfg.aging_s
+            if wait > bound:
+                starved += 1
+            if r["ttft"] is None and r["tpot"] is None:
+                continue
+            declared += 1
+            ok = r["done"] is not None
+            if ok and r["ttft"] is not None:
+                ok = ttft <= r["ttft"]
+            if ok and r["tpot"] is not None and r["decoded"] > 1:
+                ok = ((r["done"] - r["first"]) / (r["decoded"] - 1)
+                      <= r["tpot"])
+            met += int(ok)
+        return {
+            "policy": cfg.policy,
+            "completed": done_n,
+            "slo_attainment": (met / declared) if declared else 1.0,
+            "p99_ttft_s": float(np.percentile(ttfts, 99)) if ttfts else 0.0,
+            "mean_ttft_s": (float(np.mean([x for x in ttfts
+                                           if np.isfinite(x)]))
+                            if any(np.isfinite(x) for x in ttfts) else 0.0),
+            "preemptions": preemptions,
+            "starved": starved,
+            "requests": [{k: r[k] for k in
+                          ("rid", "arrival", "admitted", "first", "done",
+                           "prio", "decoded")} for r in reqs],
+        }
 
 
 def cache_policy_penalty(trace: Trace, num_layers: int, weights: PolicyWeights,

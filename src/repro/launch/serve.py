@@ -30,8 +30,9 @@ from repro.core import EngineConfig, OffloadEngine, Thresholds
 from repro.core.simulator import HARDWARE, HobbitSimConfig, simulate_systems
 from repro.models import build_model
 from repro.quant.quantize import expert_nbytes
-from repro.serving.api import generate, make_backend
+from repro.serving.api import BackendConfig, generate, make_backend
 from repro.serving.batching import BatchingServer, Request
+from repro.serving.workload import DEFAULT_AGING_S
 from repro.training import checkpoint as ckpt
 
 
@@ -64,6 +65,10 @@ def main():
                          "generate call")
     ap.add_argument("--max-batch", type=int, default=4,
                     help="scheduler slots for --serve-requests")
+    ap.add_argument("--jit", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="jit the dense prefill/decode steps "
+                         "(--no-jit: eager, for debugging)")
     ap.add_argument("--paged-kv", action="store_true",
                     help="paged KV cache: slots draw pages from a shared "
                          "pool instead of each allocating max_len up front "
@@ -86,6 +91,26 @@ def main():
     ap.add_argument("--admit-k", type=int, default=4,
                     help="max requests prefilling concurrently in the "
                          "scheduler (--serve-requests)")
+    ap.add_argument("--sched", choices=["slo", "fifo"], default="slo",
+                    help="scheduler admission policy (--serve-requests): "
+                         "'slo' orders the queue by SLO urgency (priority + "
+                         "aging + TTFT slack) and preempts a low-priority "
+                         "decode when a more urgent request cannot fit; "
+                         "'fifo' is strict arrival order, no preemption")
+    ap.add_argument("--aging-s", type=float, default=DEFAULT_AGING_S,
+                    help="seconds of queue wait worth one priority level "
+                         "(--sched slo): bounds every request's wait, so "
+                         "low-priority work cannot starve")
+    ap.add_argument("--preempt-margin", type=float, default=1.0,
+                    help="effective-priority gap the queued request must "
+                         "hold over the best victim before the scheduler "
+                         "pauses it (--sched slo); higher = rarer "
+                         "preemption")
+    ap.add_argument("--priority-every", type=int, default=0,
+                    help="mark every Nth --serve-requests request "
+                         "priority 2 with a 2 s TTFT SLO (0 = all "
+                         "priority 0, no SLOs) — exercises the SLO-aware "
+                         "scheduler end to end")
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend a common N-token prefix (a shared system "
                          "prompt) to every --serve-requests prompt, so the "
@@ -136,17 +161,18 @@ def main():
 
     if kind == "hobbit":
         assert cfg.moe is not None, "--backend hobbit requires a MoE arch"
-    backend = make_backend(
-        kind, model, params,
-        engine_config=EngineConfig(
+    # flags mirror BackendConfig 1:1 (the deprecated kwarg form is gone here)
+    backend = make_backend(BackendConfig(
+        kind=kind, jit=args.jit, paged=args.paged_kv,
+        page_size=args.page_size, kv_pages=args.kv_pages,
+        prefill_chunk=args.prefill_chunk,
+        prefix_sharing=args.prefix_sharing,
+        engine=EngineConfig(
             hi_slots=args.hi_slots, lo_slots=args.lo_slots,
             thresholds=Thresholds(args.t1, args.t2),
             streams=args.streams, ordered=args.ordered,
             upgrade=args.upgrade, link_gbps=args.link_gbps)
-        if kind == "hobbit" else None,
-        paged=args.paged_kv, page_size=args.page_size,
-        kv_pages=args.kv_pages, prefill_chunk=args.prefill_chunk,
-        prefix_sharing=args.prefix_sharing)
+        if kind == "hobbit" else None), model, params)
 
     rng = np.random.default_rng(0)
     report = {"backend": kind, "paged_kv": args.paged_kv}
@@ -155,17 +181,24 @@ def main():
         srv = BatchingServer(backend, max_batch=args.max_batch,
                              max_len=(args.shared_prefix + args.prompt_len * 2
                                       + args.new_tokens + 8),
-                             admit_k=args.admit_k)
+                             admit_k=args.admit_k, policy=args.sched,
+                             aging_s=args.aging_s,
+                             preempt_margin=args.preempt_margin)
         common = rng.integers(0, cfg.vocab_size, args.shared_prefix)
         for i in range(args.serve_requests):
             plen = args.prompt_len * (1 + i % 2)
             prompt = np.concatenate(
                 [common, rng.integers(0, cfg.vocab_size, plen)])
+            urgent = args.priority_every and i % args.priority_every == 0
             srv.submit(Request(
                 rid=i, prompt=prompt,
-                max_new_tokens=args.new_tokens // (1 + i % 2)))
+                max_new_tokens=args.new_tokens // (1 + i % 2),
+                priority=2 if urgent else 0,
+                ttft_slo_s=2.0 if urgent else None))
         srv.run()
         report["serving"] = srv.stats()
+        report["scheduler"] = {"policy": args.sched,
+                               "preemptions": srv.preemptions}
     else:
         prompts = jnp.asarray(
             rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),

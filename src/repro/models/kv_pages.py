@@ -495,6 +495,59 @@ class PagedKVPool:
         self.reserved[slot] = 0
         self._table_dev = None
 
+    # ------------- preemption snapshots -------------
+    # owner: main-thread
+    def snapshot_slot(self, slot: int) -> Dict[str, object]:
+        """Host-side snapshot of `slot`'s KV state for preemption: page
+        contents (gathered through the slot's table to host, per layer),
+        written length, and the undrawn reservation balance.  Taken BEFORE
+        ``release(slot)`` — the snapshot copies aliased prefix pages too, so
+        releasing afterwards only drops this slot's refcounts and the
+        remaining sharers keep the originals untouched."""
+        pages = [int(p) for p in self.owned[slot]]
+        if pages:
+            idx = jnp.asarray(np.asarray(pages, np.int32))
+            k = [np.asarray(kp[idx]) for kp in self.k]
+            v = [np.asarray(vp[idx]) for vp in self.v]
+        else:
+            k, v = [], []
+        return {"length": int(self.lens[slot]),
+                "reserved": int(self.reserved[slot]),
+                "num_pages": len(pages), "k": k, "v": v}
+
+    # owner: main-thread
+    def restore_slot(self, slot: int, snap: Dict[str, object]) -> None:
+        """Re-admit a paused slot from its ``snapshot_slot`` dict: draw fresh
+        pages for the snapshotted contents (plus the original undrawn
+        reservation), scatter the page contents back on device, and restore
+        the written length.  Restored pages are private (never re-registered
+        in the prefix trie) — conservative, but sharing re-forms naturally on
+        the next admission that matches.  Raises PagePoolExhausted when the
+        pool cannot cover pages + reservation right now (the scheduler keeps
+        the snapshot and retries later)."""
+        assert not self.owned[slot], f"slot {slot} not empty on restore"
+        npages = int(snap["num_pages"])
+        reserved = int(snap["reserved"])
+        if npages + reserved > self.reservable_pages():
+            raise PagePoolExhausted(
+                f"slot {slot}: resume needs {npages}+{reserved} pages, "
+                f"{self.reservable_pages()} reservable")
+        own = self.owned[slot]
+        for li in range(npages):
+            pid = self.free.pop()
+            self.refcount[pid] = 1
+            self.table[slot, li] = pid
+            own.append(pid)
+        if npages:
+            idx = jnp.asarray(np.asarray(own, np.int32))
+            self.k = [kp.at[idx].set(jnp.asarray(sk))
+                      for kp, sk in zip(self.k, snap["k"])]
+            self.v = [vp.at[idx].set(jnp.asarray(sv))
+                      for vp, sv in zip(self.v, snap["v"])]
+        self.lens[slot] = int(snap["length"])
+        self.reserved[slot] = reserved
+        self._table_dev = None
+
     # ------------- jit-facing views -------------
     def table_device(self) -> jax.Array:
         """Page table as a device int32 (batch, max_pages_per_slot) array

@@ -15,11 +15,19 @@ a finished request `release()`s its slot mid-flight, and a queued request
     join(slot, prompt (S,)) -> (V,)  admit one request into a slot mid-flight
     join_begin(slot, prompt, ...)    start an *incremental* admission
     join_step() -> {slot: (V,)}      advance all admissions by one chunk
-    can_admit(tokens, prompt=None)   does KV capacity exist for a request?
+    can_admit(tokens, *, prompt)     does KV capacity exist for a request?
                                      (with `prompt`: net of prefix sharing)
+    pause(slot) -> snapshot          preempt a slot mid-decode: snapshot its
+                                     KV to host and release the slot
+    resume(slot, snapshot)           re-admit a paused request from snapshot
     release(slot)                    free a slot (and its KV pages)
     step(tokens (B,)) -> (B,V)       one decode step for the whole batch
     stats() -> dict                  backend-specific counters
+
+Backends are constructed through ``make_backend(BackendConfig(...))`` —
+one typed config instead of the historical kwarg sprawl (the old
+``make_backend(kind, ..., paged=..., page_size=...)`` form still works for
+one release behind a DeprecationWarning).
 
 KV memory comes in two layouts, selected per backend at construction:
 
@@ -50,7 +58,9 @@ continuous-batching scheduler lives in `serving.batching`.
 
 from __future__ import annotations
 
+import dataclasses
 import time
+import warnings
 from typing import Optional, Protocol, runtime_checkable
 
 import jax
@@ -97,12 +107,28 @@ class InferenceBackend(Protocol):
         {slot: last-token logits (V,)} for admissions that completed."""
         ...
 
-    def can_admit(self, tokens: int, prompt=None) -> bool:
+    def can_admit(self, tokens: int, *, prompt=None) -> bool:
         """True iff KV capacity for a request of `tokens` total length is
         available right now (dense backends: always).  `prompt` (the token
-        ids about to be admitted) lets paged backends price the request net
-        of prefix sharing: a prompt whose prefix aliases already-resident
-        pages only needs pages for its unshared suffix."""
+        ids about to be admitted, keyword-only) lets paged backends price
+        the request net of prefix sharing: a prompt whose prefix aliases
+        already-resident pages only needs pages for its unshared suffix."""
+        ...
+
+    def pause(self, slot: int) -> dict:
+        """Preempt an *active* slot mid-decode: snapshot its KV state to
+        host (paged backends gather the slot's written pages through its
+        table; pages aliased by other slots keep those sharers' refcounts),
+        release the slot, and return an opaque snapshot for `resume`.  The
+        scheduler uses this to evict a low-priority victim so a more urgent
+        request can take its slot/pages."""
+        ...
+
+    def resume(self, slot: int, snapshot: dict) -> None:
+        """Re-admit a paused request — possibly into a different slot —
+        from its `pause` snapshot: restore KV content and position, then
+        mark the slot active.  Decode after resume is logits-identical to
+        the unpreempted run."""
         ...
 
     def release(self, slot: int) -> None:
@@ -126,6 +152,27 @@ class InferenceBackend(Protocol):
         threads).  Idempotent; serving entry points raise RuntimeError after
         close instead of failing deep inside an executor."""
         ...
+
+
+# --------------------------------------------------------------------------
+# shared protocol plumbing
+# --------------------------------------------------------------------------
+
+def _blocking_join(backend, slot: int, prompt) -> np.ndarray:
+    """THE blocking-join implementation.
+
+    Both backends' `join` (and the engine's) are documented thin wrappers
+    over this loop: begin an incremental admission, then drive `join_step`
+    until `slot` completes.  Other pending admissions advance alongside;
+    their finished logits are stashed on the backend (`_unclaimed_joins`)
+    and stay claimable by the next `join_step` call."""
+    backend.join_begin(slot, np.asarray(prompt, np.int32).reshape(-1))
+    while True:
+        done = backend.join_step()
+        lg = done.pop(slot, None)
+        backend._unclaimed_joins.update(done)
+        if lg is not None:
+            return lg
 
 
 # --------------------------------------------------------------------------
@@ -157,6 +204,28 @@ def _scatter_slot(dst_cache, src_cache, slot: int):
     if "enc_kv" in dst_cache:
         out["enc_kv"] = dst_cache["enc_kv"].at[:, :, slot].set(
             src_cache["enc_kv"][:, :, 0].astype(dst_cache["enc_kv"].dtype))
+    return out
+
+
+def _gather_slot(src_cache, slot: int):
+    """Read row `slot` of a batched decode cache out as a batch=1 cache —
+    the exact inverse of `_scatter_slot` (same per-entry batch axes), so a
+    `pause` snapshot re-scatters bit-identically on `resume`."""
+
+    def ax0(b):
+        return b[slot:slot + 1]
+
+    def ax1(b):
+        return b[:, slot:slot + 1]
+
+    tmap = jax.tree_util.tree_map
+    out = {
+        "prefix": [tmap(ax0, b) for b in src_cache["prefix"]],
+        "blocks": [tmap(ax1, b) for b in src_cache["blocks"]],
+        "tail": [tmap(ax0, b) for b in src_cache["tail"]],
+    }
+    if "enc_kv" in src_cache:
+        out["enc_kv"] = src_cache["enc_kv"][:, :, slot:slot + 1]
     return out
 
 
@@ -200,6 +269,7 @@ class DenseBackend:
         self.kv: Optional[PagedKVPool] = None
         self._admission: Optional[ChunkedPrefill] = None
         self._pending_joins: dict = {}  # non-paged incremental admissions
+        self._unclaimed_joins: dict = {}  # finished during a blocking join
         self.batch = 0
         self.max_len = 0
 
@@ -217,6 +287,7 @@ class DenseBackend:
         self.positions = jnp.zeros((batch,), jnp.int32)
         self.active = np.ones((batch,), bool)
         self._pending_joins = {}
+        self._unclaimed_joins = {}
         if not self.paged:
             self.cache = self.model.init_cache(batch, max_len)
             return
@@ -255,19 +326,12 @@ class DenseBackend:
         return np.asarray(logits, np.float32)
 
     def join(self, slot: int, prompt) -> np.ndarray:
-        """Blocking admission (protocol compatibility).  Paged slots reserve
-        the full max_len and run their chunks to completion (concurrently
-        pending join_begin admissions advance alongside; their finished
-        logits stay claimable by the next join_step).  Dense slots prefill
-        one-shot without touching other pending admissions."""
-        if self.paged:
-            lg = self._admission.run(slot, np.asarray(prompt, np.int32),
-                                     reserve_tokens=self.max_len)
-            self.positions = self.positions.at[slot].set(
-                int(self.kv.lens[slot]))
-            self.active[slot] = True
-            return lg
-        return self._join_dense(slot, np.asarray(prompt, np.int32))
+        """Blocking admission — a documented thin wrapper over
+        `join_begin`/`join_step` (`_blocking_join`, the single blocking-join
+        implementation shared by every backend).  Paged slots reserve the
+        full max_len; concurrently pending admissions advance alongside and
+        their finished logits stay claimable by the next join_step."""
+        return _blocking_join(self, slot, prompt)
 
     def join_begin(self, slot: int, prompt,
                    reserve_tokens: Optional[int] = None) -> None:
@@ -284,11 +348,14 @@ class DenseBackend:
     def join_step(self) -> dict:
         """Advance admissions one chunk (paged: ONE shared jitted call over
         every pending prompt; dense: each pending prompt's one-shot prefill).
-        Completed slots are activated; returns their logits."""
-        done: dict = {}
+        Completed slots are activated; returns their logits, plus any slots
+        that finished inside an earlier blocking `join` and were not yet
+        claimed."""
+        done: dict = dict(self._unclaimed_joins)
+        self._unclaimed_joins = {}
         if self.paged:
-            done = self._admission.step()
-            for slot, _ in done.items():
+            done.update(self._admission.step())
+            for slot in done:
                 plen = int(self.kv.lens[slot])
                 self.positions = self.positions.at[slot].set(plen)
                 self.active[slot] = True
@@ -308,7 +375,7 @@ class DenseBackend:
         self.active[slot] = True
         return np.asarray(logits[0], np.float32)
 
-    def can_admit(self, tokens: int, prompt=None) -> bool:
+    def can_admit(self, tokens: int, *, prompt=None) -> bool:
         """Paged: does the pool have unreserved pages for `tokens`?  With
         `prompt`, the pool prices the best prefix-sharing plan — aliased
         prefix pages are free, only the unshared suffix needs reservable
@@ -316,6 +383,33 @@ class DenseBackend:
         if self.paged:
             return self.kv.can_reserve(tokens, prompt=prompt)
         return True
+
+    def pause(self, slot: int) -> dict:
+        """Preempt `slot` mid-decode: snapshot its KV to host and free the
+        slot.  Paged: the snapshot gathers the slot's written pages through
+        its table *before* release, so pages aliased by other slots keep
+        those sharers' refcounts (only this slot's references drop)."""
+        pos = int(np.asarray(self.positions)[slot])
+        if self.paged:
+            snap = self.kv.snapshot_slot(slot)
+            self.kv.release(slot)
+            self.active[slot] = False
+            return {"layout": "paged", "position": pos, "kv": snap}
+        cache = jax.tree_util.tree_map(np.asarray,
+                                       _gather_slot(self.cache, slot))
+        self.active[slot] = False
+        return {"layout": "dense", "position": pos, "cache": cache}
+
+    def resume(self, slot: int, snapshot: dict) -> None:
+        """Re-admit a paused request into `slot` (any free slot works): the
+        snapshot's KV bytes are written back verbatim, so decode continues
+        logits-identical to the unpreempted run."""
+        if self.paged:
+            self.kv.restore_slot(slot, snapshot["kv"])
+        else:
+            self.cache = _scatter_slot(self.cache, snapshot["cache"], slot)
+        self.positions = self.positions.at[slot].set(snapshot["position"])
+        self.active[slot] = True
 
     def release(self, slot: int) -> None:
         """Free a slot; paged slots return their pages to the pool for the
@@ -397,7 +491,9 @@ class HobbitBackend:
         return self.engine.prefill_batch(prompts)
 
     def join(self, slot: int, prompt) -> np.ndarray:
-        """Blocking mid-flight admission of one request into `slot`."""
+        """Blocking mid-flight admission of one request into `slot` — the
+        engine's `join` is itself a thin wrapper over the shared
+        `_blocking_join` loop (one implementation, not three)."""
         return self.engine.join(slot, prompt)
 
     def join_begin(self, slot: int, prompt,
@@ -409,10 +505,21 @@ class HobbitBackend:
         """Advance every in-progress admission by one prefill chunk."""
         return self.engine.join_step()
 
-    def can_admit(self, tokens: int, prompt=None) -> bool:
+    def can_admit(self, tokens: int, *, prompt=None) -> bool:
         """KV-capacity gate for admission (always True under dense KV; with
         `prompt`, paged engines price the request net of prefix sharing)."""
         return self.engine.can_admit(tokens, prompt=prompt)
+
+    def pause(self, slot: int) -> dict:
+        """Preempt `slot` mid-decode: snapshot its KV (dense rows or paged
+        pages, prefix-sharing refcounts handled by the pool) to host and
+        free the slot for a more urgent request."""
+        return self.engine.pause(slot)
+
+    def resume(self, slot: int, snapshot: dict) -> None:
+        """Restore a paused request's KV and position into `slot`; decode
+        continues logits-identical to the unpreempted run."""
+        self.engine.resume(slot, snapshot)
 
     def release(self, slot: int) -> None:
         """Free a slot (and its KV pages under paged KV)."""
@@ -435,33 +542,78 @@ class HobbitBackend:
         self.engine.close()
 
 
-def make_backend(kind: str, model: Model, params, *, engine_config=None,
-                 jit: bool = True, paged: bool = False, page_size: int = 64,
-                 kv_pages: Optional[int] = None, prefill_chunk: int = 64,
-                 prefix_sharing: bool = True):
-    """Factory for launchers: kind in {"dense", "hobbit"}.  `paged` (with
-    `page_size` / `kv_pages` / `prefill_chunk` / `prefix_sharing`) selects
-    the paged KV layout on either backend; for hobbit it overrides the
-    corresponding EngineConfig fields."""
-    if kind == "dense":
-        return DenseBackend(model, params, jit=jit, paged=paged,
-                            page_size=page_size, kv_pages=kv_pages,
-                            prefill_chunk=prefill_chunk,
-                            prefix_sharing=prefix_sharing)
-    if kind == "hobbit":
-        import dataclasses
+@dataclasses.dataclass(frozen=True)
+class BackendConfig:
+    """Typed backend construction config — the ONE argument `make_backend`
+    consumes (mirrored 1:1 by `launch/serve.py` flags).
 
+    kind            "dense" (resident weights) or "hobbit" (offload engine)
+    jit             jit the dense prefill/decode steps
+    paged           paged KV layout (shared page pool) on either backend
+    page_size       tokens per KV page
+    kv_pages        pool size in pages (None: the dense equivalent)
+    prefill_chunk   tokens per chunked-prefill call
+    prefix_sharing  radix prefix cache over the paged pool
+    engine          `core.EngineConfig` for kind="hobbit" (None: defaults);
+                    `paged=True` overrides its paged-KV fields
+    """
+    kind: str = "dense"
+    jit: bool = True
+    paged: bool = False
+    page_size: int = 64
+    kv_pages: Optional[int] = None
+    prefill_chunk: int = 64
+    prefix_sharing: bool = True
+    engine: Optional[object] = None
+
+
+_UNSET = object()   # distinguishes "not passed" from any explicit value
+
+
+def make_backend(kind, model: Model, params, *, engine_config=_UNSET,
+                 jit=_UNSET, paged=_UNSET, page_size=_UNSET, kv_pages=_UNSET,
+                 prefill_chunk=_UNSET, prefix_sharing=_UNSET):
+    """Factory for launchers: ``make_backend(BackendConfig(...), model,
+    params)``.  A bare string kind (``make_backend("dense", model, params)``)
+    is accepted as shorthand for the all-defaults config; passing any of the
+    historical keyword arguments is DEPRECATED (they are folded into a
+    BackendConfig behind a DeprecationWarning and removed next release)."""
+    legacy = {name: val for name, val in [
+        ("engine", engine_config), ("jit", jit), ("paged", paged),
+        ("page_size", page_size), ("kv_pages", kv_pages),
+        ("prefill_chunk", prefill_chunk), ("prefix_sharing", prefix_sharing),
+    ] if val is not _UNSET}
+    if isinstance(kind, BackendConfig):
+        if legacy:
+            raise TypeError(
+                "make_backend(BackendConfig(...)) takes no keyword "
+                f"arguments; fold {sorted(legacy)} into the config")
+        cfg = kind
+    else:
+        if legacy:
+            warnings.warn(
+                "make_backend(kind, ..., **kwargs) is deprecated; pass "
+                "make_backend(BackendConfig(kind=..., ...), model, params)",
+                DeprecationWarning, stacklevel=2)
+        cfg = BackendConfig(kind=kind, **legacy)
+
+    if cfg.kind == "dense":
+        return DenseBackend(model, params, jit=cfg.jit, paged=cfg.paged,
+                            page_size=cfg.page_size, kv_pages=cfg.kv_pages,
+                            prefill_chunk=cfg.prefill_chunk,
+                            prefix_sharing=cfg.prefix_sharing)
+    if cfg.kind == "hobbit":
         from repro.core.engine import EngineConfig, OffloadEngine
-        ecfg = engine_config or EngineConfig()
-        if paged:
+        ecfg = cfg.engine or EngineConfig()
+        if cfg.paged:
             ecfg = dataclasses.replace(ecfg, paged_kv=True,
-                                       kv_page_size=page_size,
-                                       kv_pages=kv_pages,
-                                       prefill_chunk=prefill_chunk,
-                                       prefix_sharing=prefix_sharing)
+                                       kv_page_size=cfg.page_size,
+                                       kv_pages=cfg.kv_pages,
+                                       prefill_chunk=cfg.prefill_chunk,
+                                       prefix_sharing=cfg.prefix_sharing)
         eng = OffloadEngine(model, params, ecfg)
         return HobbitBackend(eng)
-    raise ValueError(f"unknown backend kind: {kind!r}")
+    raise ValueError(f"unknown backend kind: {cfg.kind!r}")
 
 
 # --------------------------------------------------------------------------

@@ -1,16 +1,28 @@
 """Continuous batching for the serving path, backend-agnostic.
 
 The scheduler owns `max_batch` slots on an `InferenceBackend` (dense or
-HOBBIT-offload — identical code path).  Requests queue FIFO; admission is
-*chunked and batched*: up to `admit_k` queued requests are in admission
-concurrently, and one `backend.join_step()` call per scheduler iteration
-advances ALL of them by one prefill chunk (one shared jitted call on paged
-backends) before the next decode step runs — so a long prompt prefills in
-fixed-size chunks interleaved with decode steps and never stalls in-flight
-decodes.  On completion a request `release`s its slot (returning its KV
-pages to the pool on paged backends) and the next queued request joins at
-the very next step — no bucketing by prompt length and no waiting for
-batch-mates to finish.
+HOBBIT-offload — identical code path).  Admission is SLO-aware by default
+(`policy="slo"`): the queue is ordered by `serving.workload.slo_urgency`
+(effective priority = static priority + aging credit, tie-broken by TTFT
+deadline slack), which degrades to FIFO when requests carry no
+priority/SLO metadata; `policy="fifo"` forces strict arrival order.  When
+the most urgent queued request cannot be admitted (no free slot or no KV
+headroom) and it outranks the least urgent decoding request by more than
+`preempt_margin` effective-priority levels, the scheduler *preempts*: the
+victim's KV state is snapshotted to host (`backend.pause`), its slot and
+pages are freed, and it is requeued with its decode progress intact — it
+resumes later via `backend.resume` without re-prefilling.  Aging bounds
+starvation (any waiting request eventually outranks any fixed priority).
+
+Admission is *chunked and batched*: up to `admit_k` queued requests are in
+admission concurrently, and one `backend.join_step()` call per scheduler
+iteration advances ALL of them by one prefill chunk (one shared jitted
+call on paged backends) before the next decode step runs — so a long
+prompt prefills in fixed-size chunks interleaved with decode steps and
+never stalls in-flight decodes.  On completion a request `release`s its
+slot (returning its KV pages to the pool on paged backends) and the next
+queued request joins at the very next step — no bucketing by prompt length
+and no waiting for batch-mates to finish.
 
 Admission is KV-aware: a request is only admitted when
 `backend.can_admit(prompt + max_new_tokens + 1)` says the pool can hold its
@@ -34,9 +46,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.kv_pages import PagePoolExhausted
 from repro.models.model import Model
 from repro.serving.api import DenseBackend, InferenceBackend
 from repro.serving.decode import sample_token
+from repro.serving.workload import (DEFAULT_AGING_S, effective_priority,
+                                    slo_urgency)
 
 
 @dataclasses.dataclass
@@ -46,6 +61,10 @@ class Request:
     prompt: np.ndarray              # (S,)
     max_new_tokens: int
     submitted_at: float = 0.0
+    # SLO metadata (all optional — a metadata-free request behaves FIFO):
+    priority: int = 0               # static class priority (higher wins)
+    ttft_slo_s: Optional[float] = None   # submit -> first token target
+    tpot_slo_s: Optional[float] = None   # per-output-token decode target
     # filled on completion:
     output: Optional[np.ndarray] = None
     queue_wait_s: float = 0.0       # submit -> admission started (slot+KV)
@@ -70,31 +89,47 @@ class BatchingServer:
 
     def __init__(self, backend_or_model, params=None, *, max_batch: int = 8,
                  max_len: int = 512, temperature: float = 0.0, seed: int = 0,
-                 admit_k: int = 4):
+                 admit_k: int = 4, policy: str = "slo",
+                 aging_s: float = DEFAULT_AGING_S,
+                 preempt_margin: float = 1.0):
+        """policy: "slo" (urgency-ordered admission + preemption; degrades
+        to FIFO when requests carry no priority/SLO metadata) or "fifo"
+        (strict arrival order, never preempts).  aging_s / preempt_margin
+        parameterize `serving.workload.effective_priority`."""
         if isinstance(backend_or_model, Model):
             backend: InferenceBackend = DenseBackend(backend_or_model, params)
         else:
             backend = backend_or_model
+        assert policy in ("slo", "fifo"), policy
         self.backend = backend
         self.max_batch = max_batch
         self.max_len = max_len
         self.temperature = temperature
         self.admit_k = admit_k
+        self.policy = policy
+        self.aging_s = float(aging_s)
+        self.preempt_margin = float(preempt_margin)
         self.key = jax.random.PRNGKey(seed)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         # scheduler event log: (event, slot, rid, step_index) — lets tests
         # and operators confirm mid-flight admissions/retirements ("admit" =
-        # chunked prefill started, "join" = prefill complete, slot decoding)
+        # chunked prefill started, "join" = prefill complete, slot decoding;
+        # "preempt"/"resume" bracket a pause/resume preemption)
         self.events: List[Tuple[str, int, int, int]] = []
+        self.preemptions = 0
         self._step_time_s = 0.0
         self._step_tokens = 0
         self._occupancy_sum = 0         # Σ per-step live slots (decode+admit)
         self._steps = 0
+        self._closed = False
+        self._last_backend_stats: Optional[dict] = None
 
     def submit(self, req: Request):
-        """Queue a request (FIFO)."""
-        req.submitted_at = time.time()
+        """Queue a request.  A pre-set `submitted_at` (a workload trace's
+        arrival offset) is honored; 0.0 means "now"."""
+        if req.submitted_at == 0.0:
+            req.submitted_at = time.time()
         self.queue.append(req)
 
     # ------------------------------------------------------------------
@@ -132,19 +167,68 @@ class BatchingServer:
             self.events.append(("retire", slot, req.rid, step_idx))
             free.append(slot)
 
+        def order_queue():
+            """SLO policy: most urgent first (degenerates to FIFO without
+            priority/SLO metadata — urgency then orders purely by age)."""
+            if self.policy == "slo" and len(self.queue) > 1:
+                now = time.time()
+                self.queue.sort(key=lambda r: slo_urgency(
+                    r.priority, r.submitted_at, r.ttft_slo_s, now,
+                    self.aging_s))
+
+        def try_preempt() -> bool:
+            """Preempt-and-requeue: pause the least-urgent decoding victim
+            when the most urgent queued request cannot be admitted and
+            outranks it by more than preempt_margin effective-priority
+            levels.  Returns True when a slot+pages were freed."""
+            if self.policy != "slo" or not self.queue or not active:
+                return False
+            req = self.queue[0]
+            now = time.time()
+            eff = lambda r: effective_priority(  # noqa: E731
+                r.priority, r.submitted_at, now, self.aging_s)
+            victim_slot = min(active, key=lambda s: eff(active[s]))
+            vreq = active[victim_slot]
+            if eff(vreq) + self.preempt_margin >= eff(req):
+                return False
+            snap = self.backend.pause(victim_slot)
+            active.pop(victim_slot)
+            vreq._paused = {"snapshot": snap,           # type: ignore[attr-defined]
+                            "outs": outs.pop(victim_slot),
+                            "pending_tok": pending_tok.pop(victim_slot)}
+            self.queue.append(vreq)
+            free.append(victim_slot)
+            self.preemptions += 1
+            self.events.append(("preempt", victim_slot, vreq.rid, step_idx))
+            return True
+
         while self.queue or active or admitting:
             # finished requests free their slots before the next step
             for slot in [s for s, r in active.items()
                          if len(outs[s]) >= r.max_new_tokens]:
                 retire(slot)
             # admission: up to admit_k queued requests prefill concurrently,
-            # each gated on KV capacity for its whole lifetime
+            # each gated on KV capacity for its whole lifetime.  At most one
+            # preemption per scheduler iteration keeps the pause path from
+            # thrashing the batch.
+            order_queue()
+            if self.queue and len(admitting) < self.admit_k:
+                req = self.queue[0]
+                need = len(req.prompt) + req.max_new_tokens + 1
+                blocked = not free or not self.backend.can_admit(
+                    need, prompt=None if getattr(req, "_paused", None)
+                    else req.prompt)
+                if blocked:
+                    try_preempt()       # at most one pause per iteration
             while free and self.queue and len(admitting) < self.admit_k:
                 req = self.queue[0]
                 need = len(req.prompt) + req.max_new_tokens + 1
+                paused = getattr(req, "_paused", None)
                 # the prompt rides along so paged backends can price the
-                # request net of prefix sharing (aliased prefix = free)
-                if not self.backend.can_admit(need, prompt=req.prompt):
+                # request net of prefix sharing (aliased prefix = free);
+                # a resuming request restores private pages, so no prompt
+                if not self.backend.can_admit(
+                        need, prompt=None if paused else req.prompt):
                     if not active and not admitting:
                         # nothing in flight can ever free capacity for it
                         raise RuntimeError(
@@ -155,6 +239,24 @@ class BatchingServer:
                 self.queue.pop(0)
                 slot = free.pop(0)
                 t0 = time.time()
+                if paused is not None:
+                    # resume a preempted victim: KV restored from its host
+                    # snapshot, decode continues where it left off.  The
+                    # snapshot may need a few more pages than can_admit
+                    # priced (aliased prefix pages were copied out private),
+                    # so a failed restore just requeues the victim.
+                    try:
+                        self.backend.resume(slot, paused["snapshot"])
+                    except PagePoolExhausted:
+                        self.queue.insert(0, req)
+                        free.insert(0, slot)
+                        break           # wait for a retirement to free pages
+                    req._paused = None  # type: ignore[attr-defined]
+                    active[slot] = req
+                    outs[slot] = paused["outs"]
+                    pending_tok[slot] = paused["pending_tok"]
+                    self.events.append(("resume", slot, req.rid, step_idx))
+                    continue
                 req.queue_wait_s = t0 - req.submitted_at
                 self.backend.join_begin(slot, np.asarray(req.prompt, np.int32),
                                         reserve_tokens=need)
@@ -213,9 +315,17 @@ class BatchingServer:
 
     # ------------------------------------------------------------------
     def close(self):
-        """Scheduler teardown: close the backend so offload backends always
-        release their staging worker threads.  Idempotent (backend close is);
-        a closed server must not be run() again."""
+        """Scheduler teardown: snapshot the backend's final stats (so
+        `stats()` keeps working after close instead of raising on a closed
+        backend), then close the backend so offload backends always release
+        their staging worker threads.  Idempotent (backend close is); a
+        closed server must not be run() again."""
+        if not self._closed:
+            try:
+                self._last_backend_stats = self.backend.stats()
+            except Exception:
+                self._last_backend_stats = self._last_backend_stats or {}
+            self._closed = True
         close = getattr(self.backend, "close", None)
         if close is not None:
             close()
@@ -236,7 +346,22 @@ class BatchingServer:
         if not self.completed:
             return {}
         done = self.completed
-        backend_stats = self.backend.stats()
+        # after close() the backend's staging threads are gone: serve the
+        # snapshot taken at close instead of raising (regression: PR 9)
+        backend_stats = (self._last_backend_stats if self._closed
+                         else self.backend.stats()) or {}
+        declared = [r for r in done
+                    if r.ttft_slo_s is not None or r.tpot_slo_s is not None]
+
+        def met(r: Request) -> bool:
+            ok = True
+            if r.ttft_slo_s is not None:
+                ok = r.admission_wait_s <= r.ttft_slo_s
+            if ok and r.tpot_slo_s is not None and r.output is not None \
+                    and len(r.output) > 1:
+                ok = r.decode_s / (len(r.output) - 1) <= r.tpot_slo_s
+            return ok
+
         return {
             "requests": len(done),
             "mean_queue_wait_s": float(np.mean([r.queue_wait_s for r in done])),
@@ -262,6 +387,14 @@ class BatchingServer:
                 "served_lo_expert_steps", 0),
             "link_utilization": backend_stats.get("link_utilization", 0.0),
             "mean_total_s": float(np.mean([r.total_latency_s for r in done])),
+            # SLO scheduling outcomes: attainment over requests declaring a
+            # TTFT/TPOT target (1.0 when none do), tail first-token latency,
+            # and pause/resume preemptions fired by the SLO policy
+            "slo_attainment": ((sum(met(r) for r in declared) / len(declared))
+                               if declared else 1.0),
+            "p99_ttft_s": float(np.percentile(
+                [r.admission_wait_s for r in done], 99)),
+            "preemptions": self.preemptions,
             # decode throughput over decode-step wall time only (queue wait
             # and prefill are reported separately above)
             "decode_tok_s": self._step_tokens / max(self._step_time_s, 1e-9),

@@ -15,12 +15,17 @@ class InferenceBackend(Protocol):
     def join_begin(self, slot: int, prompt,
                    reserve_tokens: Optional[int] = None) -> None: ...
 
+    def pause(self, slot: int) -> dict: ...
+
+    def resume(self, slot: int, snapshot: dict) -> None: ...
+
     def stats(self) -> dict: ...
 
 
 class BrokenBackend:
-    """Missing release(); step() renamed its parameter; join_begin() made an
-    optional protocol parameter required; never assigns self.model."""
+    """Missing release() and pause(); step() and resume() renamed their
+    parameters; join_begin() made an optional protocol parameter required;
+    never assigns self.model."""
 
     def __init__(self, cfg):
         self.cfg = cfg
@@ -32,6 +37,9 @@ class BrokenBackend:
         return toks
 
     def join_begin(self, slot, prompt, reserve_tokens):  # optional->required
+        pass
+
+    def resume(self, slot, snap):               # signature-mismatch
         pass
 
     def stats(self):

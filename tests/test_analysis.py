@@ -77,7 +77,9 @@ def test_protocol_fixture_flags_drifted_backend():
                                "missing-protocol-attr"}
     msgs = " ".join(v.message for v in vs)
     assert "release" in msgs                    # missing method
+    assert "pause" in msgs                      # missing preemption method
     assert "toks" in msgs                       # renamed positional
+    assert "snap" in msgs                       # resume() renamed its param
     assert "reserve_tokens" in msgs             # optional made required
     assert "self.model" in msgs                 # protocol attr never assigned
 

@@ -1,0 +1,374 @@
+"""SLO-aware scheduling + preemption tests (PR 9): pause/resume logits
+parity on every backend/KV-layout combination, prefix-sharing refcount
+safety when a victim holding aliased pages is paused, the deterministic
+`ServingTimeline` SLO-vs-FIFO gates, the aging starvation bound, the
+BackendConfig deprecation shim, stats-after-close, and a live
+BatchingServer preemption round trip."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_variant
+from repro.core import EngineConfig, OffloadEngine, Thresholds
+from repro.core.simulator import ServingTimeline, TimelineConfig
+from repro.models import build_model
+from repro.serving.api import (BackendConfig, DenseBackend, HobbitBackend,
+                               make_backend)
+from repro.serving.batching import BatchingServer, Request
+from repro.serving.workload import (RequestClass, WorkloadConfig,
+                                    effective_priority, generate_workload,
+                                    slo_urgency)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_variant(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                        vocab=256)
+    cfg = dataclasses.replace(
+        cfg, dtype="float32",
+        moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    m = build_model(cfg)
+    return m, m.init(jax.random.PRNGKey(0))
+
+
+def _unconstrained(m):
+    n = m.cfg.num_layers * m.cfg.moe.num_experts
+    return EngineConfig(hi_slots=n, lo_slots=1,
+                        thresholds=Thresholds(1.0, 1.0), prefetch=False)
+
+
+def _reference_logits(backend, prompt, teacher):
+    """Per-step logits of `prompt` decoding teacher-forced in slot 0 with no
+    pause anywhere (the unpreempted baseline)."""
+    backend.start_batch(3, 48)
+    for s in range(3):
+        backend.release(s)
+    out = [backend.join(0, prompt)]
+    for t in teacher:
+        vec = np.zeros(3, np.int32)
+        vec[0] = t
+        out.append(backend.step(vec)[0])
+    return out
+
+
+def _paused_logits(backend, prompt, teacher, pause_after, *, resume_slot=0,
+                   disturb_prompt=None):
+    """Same decode, but paused after `pause_after` steps, disturbed by an
+    unrelated admission while parked, then resumed into `resume_slot`."""
+    backend.start_batch(3, 48)
+    for s in range(3):
+        backend.release(s)
+    out = [backend.join(0, prompt)]
+    slot = 0
+    for i, t in enumerate(teacher):
+        if i == pause_after:
+            snap = backend.pause(slot)
+            if disturb_prompt is not None:
+                # another request churns the KV pool / caches meanwhile
+                backend.join(1, disturb_prompt)
+                backend.step(np.asarray([0, 7, 0], np.int32))
+            backend.resume(resume_slot, snap)
+            slot = resume_slot
+        vec = np.zeros(3, np.int32)
+        vec[slot] = t
+        out.append(backend.step(vec)[slot])
+    return out
+
+
+# ------------------------------------------------ pause/resume parity
+def test_pause_resume_logits_identical_dense(setup):
+    m, params = setup
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, 256, 6)
+    teacher = rng.integers(0, 256, 5)
+    ref = _reference_logits(DenseBackend(m, params), prompt, teacher)
+    got = _paused_logits(DenseBackend(m, params), prompt, teacher, 2,
+                         disturb_prompt=rng.integers(0, 256, 4))
+    for a, b in zip(ref, got):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        assert int(np.argmax(a)) == int(np.argmax(b))
+
+
+def test_pause_resume_logits_identical_dense_paged_new_slot(setup):
+    """Paged KV: the snapshot restores into a DIFFERENT slot (fresh private
+    pages) and decode continues logits-identical."""
+    m, params = setup
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, 256, 6)
+    teacher = rng.integers(0, 256, 5)
+
+    def mk():
+        return DenseBackend(m, params, paged=True, page_size=8, kv_pages=24,
+                            prefill_chunk=8)
+
+    ref = _reference_logits(mk(), prompt, teacher)
+    got = _paused_logits(mk(), prompt, teacher, 2, resume_slot=2,
+                         disturb_prompt=rng.integers(0, 256, 4))
+    for a, b in zip(ref, got):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+        assert int(np.argmax(a)) == int(np.argmax(b))
+
+
+def test_pause_resume_logits_identical_hobbit(setup):
+    """Offload engine: pausing drops the slot's pending predictions and
+    releases it; resume restores KV rows and position bit-identically (the
+    unconstrained cache keeps every expert hi, so numerics are exact)."""
+    m, params = setup
+    rng = np.random.default_rng(2)
+    prompt = rng.integers(0, 256, 6)
+    teacher = rng.integers(0, 256, 5)
+
+    def mk():
+        return HobbitBackend(OffloadEngine(m, params, _unconstrained(m)))
+
+    ref_b, got_b = mk(), mk()
+    try:
+        ref = _reference_logits(ref_b, prompt, teacher)
+        got = _paused_logits(got_b, prompt, teacher, 2,
+                             disturb_prompt=rng.integers(0, 256, 4))
+        for a, b in zip(ref, got):
+            np.testing.assert_allclose(a, b, atol=1e-4)
+            assert int(np.argmax(a)) == int(np.argmax(b))
+    finally:
+        ref_b.close()
+        got_b.close()
+
+
+def test_pause_keeps_shared_page_refcounts(setup):
+    """Pausing a victim whose prompt aliases another slot's prefix pages
+    must only drop the victim's own references: sharers keep the pages, the
+    victim's exclusive pages return to the free list, and resume draws
+    fresh private pages."""
+    m, params = setup
+    rng = np.random.default_rng(3)
+    sys_p = rng.integers(0, 256, 16)
+    p0 = np.concatenate([sys_p, rng.integers(0, 256, 8)]).astype(np.int32)
+    p1 = np.concatenate([sys_p, rng.integers(0, 256, 8)]).astype(np.int32)
+
+    be = DenseBackend(m, params, paged=True, page_size=8, kv_pages=24,
+                      prefill_chunk=8, prefix_sharing=True)
+    be.start_batch(3, 48)
+    for s in range(3):
+        be.release(s)
+    be.join(0, p0)
+    be.join(1, p1)                  # aliases the 16-token (2-page) prefix
+    assert be.kv.stats()["prefix_hit_tokens"] >= 16
+    shared = [p for p in be.kv.owned[1] if be.kv.refcount[p] >= 2]
+    assert shared and all(p in be.kv.owned[0] for p in shared)
+    exclusive = [p for p in be.kv.owned[1] if be.kv.refcount[p] == 1]
+    be.step(np.asarray([5, 9, 0], np.int32))
+
+    snap = be.pause(1)
+    # sharers keep the aliased pages (refcount drops by exactly one)...
+    assert all(be.kv.refcount[p] == 1 and p in be.kv.owned[0]
+               for p in shared)
+    # ...and the victim's exclusive pages went back to the pool
+    assert all(be.kv.refcount[p] == 0 and p in be.kv.free
+               for p in exclusive)
+
+    pos_ref = int(np.asarray(be.positions)[0])
+    be.resume(2, snap)              # fresh private pages, any free slot
+    assert all(be.kv.refcount[p] == 1 for p in be.kv.owned[2])
+    assert int(np.asarray(be.positions)[2]) == pos_ref
+    lg = be.step(np.asarray([5, 9, 9], np.int32))
+    assert np.isfinite(lg[2]).all()
+
+
+# ------------------------------------------------ deterministic timeline
+def _burst_trace():
+    return generate_workload(WorkloadConfig(
+        classes=(
+            RequestClass("batch", weight=1.0, priority=0,
+                         prompt_tokens=(192, 256), new_tokens=(48, 64)),
+            RequestClass("interactive", weight=1.0, priority=2,
+                         ttft_slo_s=1.5, prompt_tokens=(16, 48),
+                         new_tokens=(8, 16), shared_prefix=True),
+        ),
+        num_requests=24, arrival_rate=2.0, burst_factor=6.0,
+        burst_every_s=6.0, burst_len_s=1.5, seed=7))
+
+
+def _run_timeline(policy):
+    return ServingTimeline(TimelineConfig(
+        slots=3, kv_tokens=1024, prefill_tok_s=2048.0, decode_step_s=0.05,
+        policy=policy)).run(_burst_trace())
+
+
+def test_timeline_slo_beats_fifo_on_burst_trace():
+    """The PR-9 acceptance scenario (also CI-gated via baseline.json):
+    SLO-aware scheduling lifts attainment >= 1.3x over FIFO, actually
+    preempts, starves nobody, and still completes every request."""
+    fifo, slo = _run_timeline("fifo"), _run_timeline("slo")
+    assert fifo["completed"] == slo["completed"] == 24
+    assert slo["slo_attainment"] >= 1.3 * fifo["slo_attainment"]
+    assert slo["preemptions"] >= 1
+    assert slo["starved"] == 0
+    assert fifo["preemptions"] == 0     # FIFO never preempts
+
+
+def test_timeline_aging_bounds_every_wait():
+    """No request — including the requeued preemption victims — waits past
+    the aging starvation bound `(p_max - prio + margin + 1) * aging_s`."""
+    res = _run_timeline("slo")
+    tc = TimelineConfig()
+    p_max = max(r["prio"] for r in res["requests"])
+    for r in res["requests"]:
+        assert r["admitted"] is not None
+        bound = (p_max - r["prio"] + tc.preempt_margin + 1) * tc.aging_s
+        assert r["admitted"] - r["arrival"] <= bound
+
+
+def test_effective_priority_aging_bound_math():
+    """A priority-0 request that has waited (p1 + margin) * aging_s
+    outranks a fresh priority-p1 request by the preemption margin."""
+    aging, margin, p1 = 10.0, 1.0, 3
+    now = 100.0
+    old = effective_priority(0, now - (p1 + margin) * aging, now, aging)
+    fresh = effective_priority(p1, now, now, aging)
+    assert old >= fresh + margin
+    # urgency ordering: the aged request now sorts first
+    assert slo_urgency(0, now - (p1 + margin) * aging, None, now, aging) \
+        < slo_urgency(p1, now, None, now, aging)
+
+
+# ------------------------------------------------ BackendConfig shim
+def test_make_backend_legacy_kwargs_deprecated_and_equivalent(setup):
+    m, params = setup
+    with pytest.warns(DeprecationWarning):
+        old = make_backend("dense", m, params, paged=True, page_size=32,
+                           kv_pages=24, prefill_chunk=16,
+                           prefix_sharing=False)
+    new = make_backend(BackendConfig(
+        kind="dense", paged=True, page_size=32, kv_pages=24,
+        prefill_chunk=16, prefix_sharing=False), m, params)
+    for attr in ("paged", "page_size", "kv_pages", "prefill_chunk",
+                 "prefix_sharing", "_jit"):
+        assert getattr(old, attr) == getattr(new, attr), attr
+
+    ecfg = EngineConfig(hi_slots=4, lo_slots=2)
+    with pytest.warns(DeprecationWarning):
+        old_h = make_backend("hobbit", m, params, engine_config=ecfg)
+    new_h = make_backend(BackendConfig(kind="hobbit", engine=ecfg),
+                         m, params)
+    try:
+        assert old_h.engine.ecfg == new_h.engine.ecfg
+    finally:
+        old_h.close()
+        new_h.close()
+
+
+def test_make_backend_rejects_config_plus_kwargs(setup):
+    m, params = setup
+    with pytest.raises(TypeError):
+        make_backend(BackendConfig(), m, params, paged=True)
+
+
+def test_make_backend_bare_kind_no_warning(setup):
+    import warnings
+
+    m, params = setup
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        be = make_backend("dense", m, params)
+    assert isinstance(be, DenseBackend)
+
+
+# ------------------------------------------------ stats after close
+def test_server_stats_after_close_returns_snapshot(setup):
+    """Regression (PR 9): stats() after close() must serve the snapshot
+    taken at close instead of calling into the closed backend."""
+    m, params = setup
+
+    class ClosingBackend(DenseBackend):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            self._dead = False
+
+        def close(self):
+            self._dead = True
+            super().close()
+
+        def stats(self):
+            if self._dead:
+                raise RuntimeError("backend closed")
+            return super().stats()
+
+    srv = BatchingServer(ClosingBackend(m, params), max_batch=2, max_len=48)
+    rng = np.random.default_rng(4)
+    for i in range(3):
+        srv.submit(Request(rid=i, prompt=rng.integers(0, 256, 6),
+                           max_new_tokens=3))
+    srv.run()
+    before = srv.stats()
+    srv.close()
+    srv.close()                     # idempotent
+    after = srv.stats()             # must not raise
+    assert after["requests"] == before["requests"] == 3
+    assert after["backend"]["backend"] == "dense"
+
+
+# ------------------------------------------------ live preemption
+class _InjectingBackend(DenseBackend):
+    """Submits a high-priority request to the server mid-decode (the
+    single-threaded analogue of traffic arriving while the batch is busy)."""
+
+    def __init__(self, model, params, *, inject_after, make_req):
+        super().__init__(model, params)
+        self._steps = 0
+        self._inject_after = inject_after
+        self._make_req = make_req
+        self.server = None
+
+    def step(self, tokens):
+        self._steps += 1
+        if self._steps == self._inject_after:
+            self.server.submit(self._make_req())
+        return super().step(tokens)
+
+
+def test_server_preempts_and_resumes_victim_exactly(setup):
+    """Live end-to-end: a priority-2 arrival preempts the lone priority-0
+    decode (pause -> snapshot -> requeue), runs to completion, then the
+    victim resumes and finishes with output IDENTICAL to its isolated run."""
+    m, params = setup
+    rng = np.random.default_rng(5)
+    p_victim = rng.integers(0, 256, 6)
+    p_urgent = rng.integers(0, 256, 4)
+
+    be = _InjectingBackend(
+        m, params, inject_after=3,
+        make_req=lambda: Request(rid=1, prompt=p_urgent, max_new_tokens=4,
+                                 priority=2, ttft_slo_s=10.0))
+    srv = BatchingServer(be, max_batch=1, max_len=48, preempt_margin=0.5)
+    be.server = srv
+    srv.submit(Request(rid=0, prompt=p_victim, max_new_tokens=12))
+    srv.run()
+
+    assert srv.preemptions == 1
+    kinds = [e[0] for e in srv.events]
+    assert "preempt" in kinds and "resume" in kinds
+    assert kinds.index("preempt") < kinds.index("resume")
+    by_rid = {r.rid: r for r in srv.completed}
+    assert len(by_rid[1].output) == 4
+
+    # the preempted victim's full output equals its unpreempted run
+    from repro.serving.api import generate
+    ref = generate(DenseBackend(m, params), p_victim[None], 12, max_len=48)
+    np.testing.assert_array_equal(by_rid[0].output,
+                                  ref.tokens[0, len(p_victim):])
+
+
+def test_server_fifo_policy_never_preempts(setup):
+    m, params = setup
+    rng = np.random.default_rng(6)
+    srv = BatchingServer(DenseBackend(m, params), max_batch=1, max_len=48,
+                         policy="fifo")
+    for i in range(3):
+        srv.submit(Request(rid=i, prompt=rng.integers(0, 256, 5),
+                           max_new_tokens=3, priority=i))
+    srv.run()
+    assert srv.preemptions == 0
+    assert [r.rid for r in srv.completed] == [0, 1, 2]  # arrival order
