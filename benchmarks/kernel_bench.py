@@ -4,16 +4,17 @@ Table 1 / Fig 2b analogue: expert weight share per architecture).
 
 ``--smoke --json PATH`` emits the kernel-tier parity rows gated by CI
 (``tools/check_bench.py``): interpret-mode relative error of the paged
-flash-decode and fused dequant+combine kernels vs their jnp oracles, the
-fused gating top-k index agreement, and a jaxpr scan proving the pallas-mode
-paged decode step never materializes the dense (B, maxp*psz, Hkv, hd)
-gathered KV view."""
+flash-decode and fused dequant+combine kernels vs their jnp oracles and the
+fused gating top-k index agreement.  The dense-gather row is informational
+only — it reports the trace-time auditor's no-dense-gather verdict
+(``tools.analysis.jaxpr_audit``), whose CI audit job is the single gated
+source of truth for the dense (B, maxp*psz, Hkv, hd) view staying off the
+pallas decode path."""
 
 from __future__ import annotations
 
 import argparse
 import json
-import os
 import pathlib
 
 import jax
@@ -91,67 +92,6 @@ def _relerr(got, want) -> float:
                  / max(np.linalg.norm(want), 1e-30))
 
 
-def _jaxpr_shapes(jaxpr):
-    """Yield the shape of every intermediate in a jaxpr, descending into
-    sub-jaxprs (jit/scan/cond bodies and pallas_call params)."""
-    for eqn in jaxpr.eqns:
-        for v in eqn.outvars:
-            yield tuple(getattr(v.aval, "shape", ()))
-        for val in eqn.params.values():
-            vals = val if isinstance(val, (list, tuple)) else (val,)
-            for item in vals:
-                sub = getattr(item, "jaxpr", None)
-                if sub is not None:
-                    yield from _jaxpr_shapes(sub)
-
-
-def _paged_decode_dense_gather_free() -> int:
-    """1 iff the pallas-mode `layers.paged_attn_decode` jaxpr contains no
-    (B, maxp*psz, Hkv, hd) intermediate — the dense gathered KV view the
-    table-driven kernel exists to eliminate.  Self-validating: the same
-    scan under xla mode MUST find that shape (the oracle gathers), so a
-    broken scan cannot silently report 1."""
-    from repro.configs import get_config, smoke_variant
-    from repro.models import layers
-
-    cfg = smoke_variant(get_config("mixtral-8x7b"), layers=2, d_model=64,
-                        vocab=128)
-    b, psz, maxp, npages = 2, 4, 6, 16
-    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-    rng = np.random.default_rng(0)
-    f32 = lambda *s: jnp.asarray(rng.normal(size=s) * 0.05, jnp.float32)
-    p = {"wq": f32(cfg.d_model, hq * hd), "wk": f32(cfg.d_model, hkv * hd),
-         "wv": f32(cfg.d_model, hkv * hd), "wo": f32(hq * hd, cfg.d_model)}
-    if cfg.qk_norm:
-        p["q_norm"], p["k_norm"] = f32(hd), f32(hd)
-    x = f32(b, 1, cfg.d_model)
-    kp = f32(npages, psz, hkv, hd)
-    table = jnp.asarray(rng.integers(0, npages, (b, maxp)), jnp.int32)
-    positions = jnp.asarray([3, 9], jnp.int32)
-    active = jnp.ones((b,), bool)
-
-    dense = (b, maxp * psz, hkv, hd)
-
-    def has_dense(mode):
-        old = os.environ.get("REPRO_KERNEL_MODE")
-        os.environ["REPRO_KERNEL_MODE"] = mode
-        try:
-            jaxpr = jax.make_jaxpr(
-                lambda x, kp, vp, tab, pos, act: layers.paged_attn_decode(
-                    p, x, kp, vp, tab, pos, act, cfg))(
-                x, kp, kp, table, positions, active)
-        finally:
-            if old is None:
-                os.environ.pop("REPRO_KERNEL_MODE", None)
-            else:
-                os.environ["REPRO_KERNEL_MODE"] = old
-        return any(s == dense for s in _jaxpr_shapes(jaxpr.jaxpr))
-
-    if not has_dense("xla"):
-        return 0  # scan is broken: the gather oracle must show the shape
-    return 0 if has_dense("pallas") else 1
-
-
 def smoke_rows() -> dict:
     """Deterministic kernel-tier parity rows for the CI bench gate."""
     rng = np.random.default_rng(0)
@@ -205,8 +145,10 @@ def smoke_rows() -> dict:
     rows["kernel_gating_topk_index_match"] = float(
         np.mean(np.asarray(idx) == np.asarray(idx_ref)))
 
-    # trace-level proof: pallas paged decode has no dense gathered KV view
-    rows["paged_decode_dense_gather_free"] = _paged_decode_dense_gather_free()
+    # informational mirror of the auditor's no-dense-gather rule (the gated
+    # proof lives in the CI `--audit` job; one source of truth)
+    from tools.analysis.jaxpr_audit import paged_decode_dense_gather_free
+    rows["paged_decode_dense_gather_free"] = paged_decode_dense_gather_free()
     return rows
 
 

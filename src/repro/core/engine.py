@@ -106,6 +106,16 @@ class EngineConfig:
     prefix_sharing: bool = True
 
 
+def pad_pow2(pairs):
+    """Repeat the last (slot, buffer) pair up to a power-of-two count: the
+    duplicate write is idempotent and caps commit-scatter retraces at
+    log(pool) shapes.  Module-level so the trace-time auditor
+    (tools/analysis/entrypoints.py) builds its variant-budget shape set with
+    the exact padding the production commit path uses."""
+    n = 1 << (len(pairs) - 1).bit_length()
+    return pairs + [pairs[-1]] * (n - len(pairs))
+
+
 class OffloadEngine:
     def __init__(self, model: Model, params, ecfg: EngineConfig):
         cfg = model.cfg
@@ -261,13 +271,6 @@ class OffloadEngine:
         """Write staged buffers into the device pools: ONE `.at[idx].set`
         scatter per pool tensor regardless of how many experts landed.
         entries: [(task_like_with_precision, slot, staged_dict)]."""
-        def pad_pow2(pairs):
-            # repeat the last (slot, buffer) up to a power-of-two count: the
-            # duplicate write is idempotent and caps scatter retraces at
-            # log(pool) shapes
-            n = 1 << (len(pairs) - 1).bit_length()
-            return pairs + [pairs[-1]] * (n - len(pairs))
-
         hi = [(s, buf) for t, s, buf in entries if t.precision == PREC_HI]
         lo = [(s, buf) for t, s, buf in entries if t.precision != PREC_HI]
         hi = pad_pow2(hi) if hi else hi

@@ -44,12 +44,13 @@ class FleetHeat:
         assert 0.0 < decay < 1.0, "decay must be in (0, 1)"
         self.decay = float(decay)
         self.floor = float(floor)
-        self._heat: Dict[ExpertKey, float] = {}
-        self._max = 0.0
-        self.requests_retired = 0
-        self.observations = 0
+        self._heat: Dict[ExpertKey, float] = {}   # owner: main-thread
+        self._max = 0.0                           # owner: main-thread
+        self.requests_retired = 0                 # owner: main-thread
+        self.observations = 0                     # owner: main-thread
 
     # ------------------------------------------------------------------
+    # owner: main-thread
     def observe(self, key: ExpertKey, weight: float = 1.0) -> None:
         """Record one routing decision for `key` (weight = gate magnitude)."""
         h = self._heat.get(key, 0.0) + float(weight)
@@ -58,6 +59,7 @@ class FleetHeat:
             self._max = h
         self.observations += 1
 
+    # owner: main-thread
     def retire_request(self) -> None:
         """Decay every key once (called when a request retires/releases)."""
         self.requests_retired += 1

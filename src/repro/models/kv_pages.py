@@ -620,7 +620,8 @@ class ChunkedPrefill:
         # donate the page buffers: the pool is rebound to the outputs right
         # after the call, so XLA may update pages in place instead of
         # holding input+output pools alive (2x KV footprint)
-        self._fn = (jax.jit(model.prefill_chunk_paged, donate_argnums=(1, 2))
+        self._fn = (jax.jit(model.prefill_chunk_paged,
+                            donate_argnums=type(model).PAGED_PREFILL_DONATE)
                     if jit else model.prefill_chunk_paged)
         # slot -> (prompt, fed, wstart): next feed offset + write floor
         self._pending: Dict[int, Tuple[np.ndarray, int, int]] = {}

@@ -589,6 +589,15 @@ class Model:
         return lg, new_cache
 
     # -------------------- paged decode / chunked prefill --------------------
+    # Donated argnums for jits of the two paged entry points below (the page
+    # buffers, rebound to the returned updated buffers by every caller).
+    # Single source of truth shared by serving/api.py (DenseBackend),
+    # models/kv_pages.py (ChunkedPrefill) and the trace-time auditor's
+    # registry (tools/analysis/entrypoints.py), so the declaration the
+    # donation-honored rule audits is the one production registers.
+    PAGED_DECODE_DONATE = (1, 2)
+    PAGED_PREFILL_DONATE = (1, 2)
+
     def decode_step_paged(self, params, k_pages, v_pages, table, tokens,
                           positions, active):
         """One decode step against a paged KV pool (`supports_paged_kv`

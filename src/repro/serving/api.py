@@ -263,8 +263,8 @@ class DenseBackend:
         # donate the page buffers (args 1, 2 after params): the pool is
         # rebound to the outputs immediately, mirroring the dense cache
         self._paged_step = (jax.jit(model.decode_step_paged,
-                                    donate_argnums=(1, 2)) if jit
-                            else model.decode_step_paged)
+                                    donate_argnums=Model.PAGED_DECODE_DONATE)
+                            if jit else model.decode_step_paged)
         self._prefill_fns = {}          # max_len -> (jitted) prefill
         self.kv: Optional[PagedKVPool] = None
         self._admission: Optional[ChunkedPrefill] = None

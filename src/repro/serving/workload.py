@@ -114,6 +114,8 @@ def to_requests(trace: Sequence[WorkloadRequest], *, t0: float = 0.0):
 # ----------------------------------------------------------------------
 # SLO ordering policy (shared by BatchingServer and ServingTimeline)
 
+# owner: main-thread — SLO ordering runs inside the scheduler step (live
+# server and virtual-clock timeline both call it from the admitting thread)
 def effective_priority(priority: int, submitted_at: float, now: float,
                        aging_s: float = DEFAULT_AGING_S) -> float:
     """Static priority + aging credit (1 level per `aging_s` waited).
@@ -125,6 +127,7 @@ def effective_priority(priority: int, submitted_at: float, now: float,
     return float(priority) + max(0.0, now - submitted_at) / aging_s
 
 
+# owner: main-thread
 def slo_urgency(priority: int, submitted_at: float,
                 ttft_slo_s: Optional[float], now: float,
                 aging_s: float = DEFAULT_AGING_S) -> Tuple[float, float]:

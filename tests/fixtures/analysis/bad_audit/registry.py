@@ -1,0 +1,104 @@
+"""Known-bad audit registry: one entry per auditor rule, each violating
+exactly that rule, plus a suppressed entry and a vanished-target entry.
+
+Loaded by tests/test_analysis.py (and ``--audit-registry``) via
+``tools.analysis.jaxpr_audit.load_registry_module`` to pin that every rule
+is live — a rule regression shows up as a missing expected violation, the
+same convention as the PR-6 known-bad fixture trees.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from tools.analysis.entrypoints import PALLAS, XLA, entry
+
+S = jax.ShapeDtypeStruct
+
+
+def _host_sync_fn(x):
+    # a registered jit smuggling a host callback into the decode path
+    jax.debug.callback(lambda v: None, x)
+    return x * 2.0
+
+
+def _broken_donation_fn(pool, x):
+    # `pool` is annotated donated by the entry below but never flows to any
+    # output, so the lowering drops the donation (double-buffered pool)
+    return x + 1.0
+
+
+def _dense_gather_fn(pages, table):
+    # materializes the dense (B, maxp*psz, H, hd) gathered cache view in
+    # EVERY mode — the xla oracle control passes, the pallas tier does not
+    b, maxp = table.shape
+    _, psz, h, hd = pages.shape
+    gathered = pages[table].reshape(b, maxp * psz, h, hd)
+    return gathered.sum(axis=1)
+
+
+def _upcast_fn(h, w):
+    # silent f32 GEMM on bf16 activations, result immediately downcast back
+    y = h.astype(jnp.float32) @ w.astype(jnp.float32)
+    return y.astype(jnp.bfloat16)
+
+
+def _quant_widen_fn(x, wq, scale):
+    # dequantizes int8 weights with plain jnp ops outside any pallas kernel
+    w = wq.astype(jnp.float32) * scale
+    return x.astype(jnp.float32) @ w
+
+
+def _identity_fn(x):
+    return x + 1.0
+
+
+REGISTRY = [
+    entry(name="bad.host_sync",
+          target="repro.kernels.ops:paged_flash_decode",
+          fn=_host_sync_fn,
+          args=(S((4,), jnp.float32),),
+          modes=(XLA,)),
+    entry(name="bad.donation",
+          target="repro.models.kv_pages:_copy_page",
+          fn=_broken_donation_fn,
+          args=(S((4, 8), jnp.float32), S((3,), jnp.float32)),
+          donate=(0,), pool_args=(0,),
+          modes=(XLA,)),
+    entry(name="bad.dense_gather",
+          target="repro.kernels.ops:paged_flash_decode",
+          fn=_dense_gather_fn,
+          args=(S((4, 2, 2, 4), jnp.float32), S((2, 4), jnp.int32)),
+          dense_shapes=((2, 8, 2, 4),)),
+    entry(name="bad.upcast",
+          target="repro.core.engine:OffloadEngine._grouped_ffn",
+          fn=_upcast_fn,
+          args=(S((4, 16), jnp.bfloat16), S((16, 16), jnp.bfloat16)),
+          activation_dtype="bfloat16",
+          modes=(XLA,)),
+    entry(name="bad.quant_widen",
+          target="repro.kernels.ops:grouped_dequant_combine",
+          fn=_quant_widen_fn,
+          args=(S((4, 8), jnp.bfloat16), S((8, 16), jnp.int8),
+                S((8, 16), jnp.float32)),
+          quant_dtypes=("int8",),
+          modes=(PALLAS,)),
+    entry(name="bad.variant_budget",
+          target="repro.core.engine:OffloadEngine._scatter_fn",
+          fn=_identity_fn,
+          args=(S((2,), jnp.float32),),
+          variant_builds=((S((2,), jnp.float32),),
+                          (S((3,), jnp.float32),),
+                          (S((5,), jnp.float32),)),
+          variant_budget=1,
+          modes=(XLA,)),
+    entry(name="ok.suppressed",  # audit: ignore[no-host-sync]
+          target="repro.kernels.ops:paged_flash_decode",
+          fn=_host_sync_fn,
+          args=(S((4,), jnp.float32),),
+          modes=(XLA,)),
+    entry(name="bad.vanished",
+          target="repro.kernels.ops:this_got_renamed",
+          fn=_identity_fn,
+          args=(S((2,), jnp.float32),),
+          modes=(XLA,)),
+]

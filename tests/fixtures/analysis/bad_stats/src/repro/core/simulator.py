@@ -1,4 +1,15 @@
-"""Fixture: simulator emitting the full parity-key set."""
+"""Fixture: simulator emitting the full parity-key set, plus a timeline
+that dropped an SLO attainment counter (`preemptions`)."""
+
+
+class ServingTimeline:
+    def run(self, trace):
+        return {
+            "policy": "slo",
+            "completed": 0,
+            "slo_attainment": 1.0,
+            "p99_ttft_s": 0.0,
+        }
 
 
 class OffloadSimulator:

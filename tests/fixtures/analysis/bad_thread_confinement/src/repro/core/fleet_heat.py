@@ -1,0 +1,17 @@
+"""Fixture: fleet heat map whose mutators are main-thread-owned."""
+
+
+class FleetHeat:
+    def __init__(self):
+        self._heat = {}      # owner: main-thread
+        self._max = 0.0      # owner: main-thread
+
+    # owner: main-thread
+    def observe(self, key, weight=1.0):
+        h = self._heat.get(key, 0.0) + weight
+        self._heat[key] = h
+        self._max = max(self._max, h)
+
+    # owner: main-thread
+    def retire_request(self):
+        self._heat = {k: v * 0.9 for k, v in self._heat.items()}

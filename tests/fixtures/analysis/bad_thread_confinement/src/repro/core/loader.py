@@ -2,16 +2,20 @@
 
 Reproduces the PR 4 review bug — the eviction decision (`cache.admit`) made
 at *copy* time on the stream executor instead of at *submit* time on the
-main thread — plus an off-thread mutation of an owned queue and an
-off-thread rebind, one per thread-confinement invariant.
+main thread — plus an off-thread mutation of an owned queue, an off-thread
+rebind, and the PR-9 variant: feeding the fleet heat map from the stream
+executor instead of the routing (main) thread.
 """
 
 from concurrent.futures import ThreadPoolExecutor
+
+from repro.core.fleet_heat import FleetHeat
 
 
 class BrokenStagingEngine:
     def __init__(self, cache):
         self.cache = cache
+        self.fleet = FleetHeat()
         self._pool = ThreadPoolExecutor(max_workers=1)
         self._pending = []          # owner: main-thread
 
@@ -21,6 +25,7 @@ class BrokenStagingEngine:
 
     def _stage_one(self, task):
         self.cache.admit(task)              # BAD: eviction at copy time
+        self.fleet.observe(task)            # BAD: fleet heat fed off-thread
         self._pending.append(task)          # BAD: owned queue, executor thread
         self._finish(task)
 

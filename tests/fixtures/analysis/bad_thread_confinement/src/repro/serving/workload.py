@@ -1,0 +1,13 @@
+"""Fixture: SLO ordering helpers (clean — scanned for coverage only)."""
+
+
+# owner: main-thread
+def effective_priority(priority, submitted_at, now, aging_s=10.0):
+    return float(priority) + max(0.0, now - submitted_at) / aging_s
+
+
+# owner: main-thread
+def slo_urgency(priority, submitted_at, ttft_slo_s, now, aging_s=10.0):
+    slack = ((submitted_at + ttft_slo_s - now) if ttft_slo_s is not None
+             else 1e12 + submitted_at - now)
+    return (-effective_priority(priority, submitted_at, now, aging_s), slack)

@@ -51,6 +51,10 @@ def test_thread_confinement_fixture_flags_all_three_invariants():
                for v in vs)
     rsv = [v for v in vs if "'reserve'" in v.message]
     assert rsv and "_drop_reservation" in rsv[0].message
+    # the PR-9 class: the fleet heat map fed from the stream executor
+    # instead of the routing (main) thread
+    obs = [v for v in vs if "'observe'" in v.message]
+    assert obs and "fleet_heat.py" in obs[0].message
 
 
 def test_hot_path_fixture_flags_syncs_and_donation():
@@ -61,13 +65,20 @@ def test_hot_path_fixture_flags_syncs_and_donation():
     assert "k_pages" in msgs        # receiver-hint jit of a bound method
 
 
-def test_stats_fixture_flags_all_four_invariants():
+def test_stats_fixture_flags_all_five_invariants():
     vs = _run("stats-schema", FIXTURES / "bad_stats")
     assert _invariants(vs) == {"engine-sim-parity", "staging-sim-drift",
-                               "undocumented-stat", "stale-doc-field"}
+                               "undocumented-stat", "stale-doc-field",
+                               "slo-sim-parity"}
     msgs = " ".join(v.message for v in vs)
     assert "link_utilization" in msgs and "secret_local_counter" in msgs
     assert "ghost_metric" in msgs
+    # the PR-9 SLO family: the fixture timeline dropped 'preemptions' and
+    # the fixture cache stats lost the fleet-informed counter
+    slo = [v for v in vs if v.invariant == "slo-sim-parity"]
+    assert any("'preemptions'" in v.message and "timeline" in v.message
+               for v in slo)
+    assert any("fleet_heat_hits" in v.message for v in slo)
 
 
 def test_protocol_fixture_flags_drifted_backend():
@@ -169,6 +180,121 @@ def test_owner_annotation_trailing_and_above(tmp_path):
     assert set(methods) == {"admit"}        # above + intermediate comment
     assert set(attrs) == {"q"}              # trailing marker
     assert methods["admit"][1] == 8
+
+
+# ------------------------------------------------ trace-time jaxpr auditor
+def _audit_fixture_findings():
+    from tools.analysis import jaxpr_audit
+
+    registry = list(jaxpr_audit.load_registry_module(
+        FIXTURES / "bad_audit" / "registry.py"))
+    return registry, jaxpr_audit.run_audit(registry)
+
+
+def test_audit_fixture_each_rule_fires_exactly():
+    from tools.analysis import jaxpr_audit
+
+    _, findings = _audit_fixture_findings()
+    by_entry = {}
+    for f in findings:
+        by_entry.setdefault(f.entrypoint, set()).add(f.rule)
+    assert by_entry == {
+        "bad.host_sync": {"no-host-sync"},
+        "bad.donation": {"donation-honored"},
+        "bad.dense_gather": {"no-dense-gather"},
+        "bad.upcast": {"dtype-policy"},
+        "bad.quant_widen": {"dtype-policy"},
+        "bad.variant_budget": {"variant-budget"},
+        "bad.vanished": {"config-drift"},
+    }
+    # every rule is proven live by at least one known-bad entry
+    assert {f.rule for f in findings} == set(jaxpr_audit.RULES) | {
+        "config-drift"}
+
+
+def test_audit_finding_format_and_slice():
+    _, findings = _audit_fixture_findings()
+    sync = next(f for f in findings if f.rule == "no-host-sync")
+    # `entrypoint: [rule] primitive @ eqn — message` with the jaxpr slice
+    assert sync.render().startswith(
+        "bad.host_sync: [no-host-sync] debug_callback @ eqn ")
+    assert "host-sync" in sync.render()
+    assert "debug_callback" in sync.jaxpr_slice
+    dense = next(f for f in findings if f.rule == "no-dense-gather")
+    assert "(2, 8, 2, 4)" in dense.message and "mode=pallas" in dense.message
+
+
+def test_audit_suppression_silences_entry():
+    registry, findings = _audit_fixture_findings()
+    sup = next(e for e in registry if e.name == "ok.suppressed")
+    assert sup.suppresses("no-host-sync")
+    assert not sup.suppresses("donation-honored")
+    assert not any(f.entrypoint == "ok.suppressed" for f in findings)
+
+
+def test_audit_config_drift_names_vanished_target():
+    _, findings = _audit_fixture_findings()
+    drift = [f for f in findings if f.rule == "config-drift"]
+    assert len(drift) == 1
+    assert "repro.kernels.ops:this_got_renamed" in drift[0].message
+
+
+def test_audit_dense_oracle_control_self_validates():
+    # an entry whose declared dense shape the xla oracle never materializes
+    # must report the CHECK as broken instead of silently passing
+    import jax
+    import jax.numpy as jnp
+
+    from tools.analysis import jaxpr_audit
+    from tools.analysis.entrypoints import entry
+
+    e = entry(name="ctl.no_gather",
+              target="repro.kernels.ops:paged_flash_decode",
+              fn=lambda x: x * 2.0,
+              args=(jax.ShapeDtypeStruct((4,), jnp.float32),),
+              dense_shapes=((2, 8, 2, 4),))
+    findings = jaxpr_audit.audit_entry(e)
+    assert [f.rule for f in findings] == ["no-dense-gather"]
+    assert "positive control failed" in findings[0].message
+
+
+def test_audit_cli_fixture_and_cache(tmp_path, capsys):
+    rc = main(["--audit", "--audit-registry",
+               str(FIXTURES / "bad_audit" / "registry.py")])
+    assert rc == 1
+    out = capsys.readouterr().out
+    assert "[no-host-sync]" in out and "[donation-honored]" in out
+    assert "violation(s)" in out
+
+    # cache round-trip: a recorded clean digest short-circuits, a different
+    # digest does not
+    from tools.analysis import jaxpr_audit
+    cache = tmp_path / "audit_cache.json"
+    jaxpr_audit.write_cache(cache, "abc123")
+    assert jaxpr_audit.cached_ok(cache, "abc123")
+    assert not jaxpr_audit.cached_ok(cache, "def456")
+    assert not jaxpr_audit.cached_ok(tmp_path / "missing.json", "abc123")
+    d1 = jaxpr_audit.tree_digest(REPO)
+    assert d1 == jaxpr_audit.tree_digest(REPO)   # deterministic
+
+
+def test_audit_real_registry_clean_under_both_modes():
+    # the acceptance gate: every registered hot-path entry point traces
+    # under both kernel modes with zero violations (donation honored, no
+    # host syncs, no dense pool gathers, dtype policy kept, variant
+    # budgets exact)
+    from tools.analysis import jaxpr_audit
+    from tools.analysis.entrypoints import build_registry
+
+    registry, drift = build_registry()
+    assert drift == []
+    names = {e.name for e in registry}
+    assert {"ops.paged_flash_decode", "engine.grouped_ffn",
+            "engine.attn_paged", "engine.commit_scatter_hi",
+            "model.decode_step_paged", "model.prefill_chunk_paged",
+            "kv.copy_page"} <= names
+    findings = jaxpr_audit.run_audit(registry, drift=drift)
+    assert findings == [], [f.render() for f in findings]
 
 
 # ------------------------------------------------ runtime TSan-lite guard

@@ -82,7 +82,7 @@ class FuncInfo:
 class CodeIndex:
     """Classes, functions and import aliases across a set of source files."""
 
-    def __init__(self, files: Iterable[SourceFile]):
+    def __init__(self, files: Iterable[SourceFile]) -> None:
         self.files: List[SourceFile] = list(files)
         self.classes: Dict[str, ast.ClassDef] = {}
         self.class_sf: Dict[str, SourceFile] = {}
@@ -95,7 +95,7 @@ class CodeIndex:
         for sf in self.files:
             self._index_file(sf)
 
-    def _index_file(self, sf: SourceFile):
+    def _index_file(self, sf: SourceFile) -> None:
         amap = self.aliases.setdefault(sf.rel, {})
         for node in ast.walk(sf.tree):
             if isinstance(node, ast.Import):

@@ -3,16 +3,60 @@
 Exit status 0 iff no checker reports a violation.  Every violation prints as
 ``file:line: [checker] invariant — message`` so CI annotations and editors
 can jump straight to the offending line.
+
+``--audit`` switches to the trace-time jaxpr auditor (the five-rule dynamic
+twin of the AST checkers): it traces every registered hot-path entry point
+under both ``REPRO_KERNEL_MODE`` values — or only the preset one, when the
+variable is already pinned in the environment — and prints violations as
+``entrypoint: [rule] primitive @ eqn — message``.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
 from typing import Optional, Sequence
 
 from tools.analysis import CHECKERS, REPO_ROOT, run_all
+
+
+def _run_audit(args: argparse.Namespace) -> int:
+    from tools.analysis import jaxpr_audit
+
+    cache = pathlib.Path(args.audit_cache) if args.audit_cache else None
+    digest = None
+    if cache is not None:
+        digest = jaxpr_audit.tree_digest(REPO_ROOT)
+        if jaxpr_audit.cached_ok(cache, digest):
+            print(f"tools.analysis --audit: cached clean ({digest[:12]})")
+            return 0
+
+    modes: Optional[Sequence[str]] = None
+    env_mode = os.environ.get("REPRO_KERNEL_MODE", "")
+    if env_mode in ("xla", "pallas"):
+        modes = (env_mode,)
+
+    if args.audit_registry:
+        registry = list(jaxpr_audit.load_registry_module(
+            pathlib.Path(args.audit_registry)))
+        findings = jaxpr_audit.run_audit(registry, modes)
+    else:
+        findings = jaxpr_audit.run_audit(None, modes)
+
+    for f in findings:
+        print(f.render())
+        if f.jaxpr_slice:
+            print(f"    {f.jaxpr_slice}")
+    if findings:
+        print(f"\ntools.analysis --audit: {len(findings)} violation(s)")
+        return 1
+    label = ",".join(modes) if modes else "xla,pallas"
+    print(f"tools.analysis --audit: OK (modes: {label})")
+    if cache is not None and digest is not None and not args.audit_registry:
+        jaxpr_audit.write_cache(cache, digest)
+    return 0
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -29,12 +73,27 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="run only this checker (repeatable)")
     ap.add_argument("--list", action="store_true",
                     help="list available checkers and exit")
+    ap.add_argument("--audit", action="store_true",
+                    help="run the trace-time jaxpr auditor over the "
+                         "registered hot-path entry points (honors a preset "
+                         "REPRO_KERNEL_MODE; both modes otherwise)")
+    ap.add_argument("--audit-registry", metavar="PATH", default=None,
+                    help="audit the REGISTRY list in this module instead of "
+                         "the real registry (tests point this at known-bad "
+                         "fixture registries)")
+    ap.add_argument("--audit-cache", metavar="PATH", default=None,
+                    help="skip the audit when this cache file records a "
+                         "clean run for the current source-tree digest; "
+                         "refreshed after a clean run")
     args = ap.parse_args(argv)
 
     if args.list:
         for name in sorted(CHECKERS):
             print(name)
         return 0
+
+    if args.audit:
+        return _run_audit(args)
 
     root = pathlib.Path(args.root).resolve()
     results = run_all(root, args.checkers)

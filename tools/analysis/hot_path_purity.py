@@ -82,8 +82,36 @@ POOL_PARAMS = {"pools", "kp", "vp", "k_pages", "v_pages"}
 RECEIVER_HINTS = {"model": "Model"}
 
 
-def _donated(call: ast.Call) -> Set[int]:
-    """Parse donate_argnums= / donate= keyword into a set of indices."""
+def _class_constants(idx: CodeIndex) -> Dict[str, Set[int]]:
+    """UPPERCASE class-level tuple-of-int constants across the indexed tree
+    (e.g. ``Model.PAGED_DECODE_DONATE = (1, 2)``) so donation declarations
+    shared between production jits and the trace-time auditor's registry
+    still resolve statically."""
+    out: Dict[str, Set[int]] = {}
+    for sf in idx.files:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            for stmt in node.body:
+                if not (isinstance(stmt, ast.Assign)
+                        and isinstance(stmt.value, (ast.Tuple, ast.List))):
+                    continue
+                vals = {e.value for e in stmt.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)}
+                if len(vals) != len(stmt.value.elts):
+                    continue
+                for tgt in stmt.targets:
+                    if isinstance(tgt, ast.Name) and tgt.id.isupper():
+                        out[tgt.id] = vals
+    return out
+
+
+def _donated(call: ast.Call,
+             consts: Optional[Dict[str, Set[int]]] = None) -> Set[int]:
+    """Parse donate_argnums= / donate= keyword into a set of indices.
+    Accepts int/tuple literals and ``Cls.SOME_CONSTANT`` references resolved
+    via ``_class_constants``."""
     for kw in call.keywords:
         if kw.arg in ("donate_argnums", "donate"):
             v = kw.value
@@ -93,6 +121,8 @@ def _donated(call: ast.Call) -> Set[int]:
                 return {e.value for e in v.elts
                         if isinstance(e, ast.Constant)
                         and isinstance(e.value, int)}
+            if isinstance(v, ast.Attribute) and consts is not None:
+                return consts.get(v.attr, set())
     return set()
 
 
@@ -101,7 +131,7 @@ class _Region:
 
     def __init__(self, node: ast.AST, info: Optional[FuncInfo],
                  sf: SourceFile, site_line: int, donated: Set[int],
-                 drop_self: bool):
+                 drop_self: bool) -> None:
         self.node = node            # FunctionDef or Lambda
         self.info = info            # None for lambdas
         self.sf = sf
@@ -194,6 +224,7 @@ def _enclosing_function_map(sf: SourceFile,
 def _find_regions(idx: CodeIndex) -> Tuple[List[_Region], List[Violation]]:
     regions: List[_Region] = []
     violations: List[Violation] = []
+    consts = _class_constants(idx)
     for sf in idx.files:
         by_line = _enclosing_function_map(sf, idx)
         for node in ast.walk(sf.tree):
@@ -205,7 +236,7 @@ def _find_regions(idx: CodeIndex) -> Tuple[List[_Region], List[Violation]]:
                             and attr_chain(dec.args[0])[-2:] == ["jax",
                                                                  "jit"]):
                         regions.append(_Region(node, None, sf, node.lineno,
-                                               _donated(dec), False))
+                                               _donated(dec, consts), False))
                 continue
             if not isinstance(node, ast.Call):
                 continue
@@ -226,7 +257,7 @@ def _find_regions(idx: CodeIndex) -> Tuple[List[_Region], List[Violation]]:
                 # dynamically built callable: nothing provable to scan
                 continue
             regions.append(_Region(fn_node, info, sf, node.lineno,
-                                   _donated(node), drop_self))
+                                   _donated(node, consts), drop_self))
     return regions, violations
 
 

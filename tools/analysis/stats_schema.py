@@ -14,7 +14,12 @@ extracts the produced key sets *statically* and cross-checks:
    either be mirrored by the simulator or explicitly allowlisted in
    ``STAGING_LOCAL_KEYS`` here (the allowlist is the reviewed record of
    engine-only metrics);
-3. **docs coverage** — every produced public key appears backticked in
+3. **SLO family parity** — the live `BatchingServer.stats()` and the
+   virtual-clock `ServingTimeline.run()` report the same attainment
+   counters (``SLO_PARITY_KEYS``), and the cache stats keep the
+   fleet-informed counters (``CACHE_REQUIRED_KEYS``) — the PR-9 policy
+   search compares live vs simulated on exactly these;
+4. **docs coverage** — every produced public key appears backticked in
    docs/METRICS.md, and every field named in a METRICS.md table's first
    column is actually produced by something.
 
@@ -59,6 +64,12 @@ STAGING_LOCAL_KEYS = {
     "copy_s", "overlap_s", "prefetch_jobs", "dropped_prefetch", "streams",
     "link_gbps",
 }
+# the PR-9 SLO family: policy search happens on the virtual-clock
+# ServingTimeline and the winner serves live traffic, so the live server and
+# the timeline must keep reporting the same attainment counters
+SLO_PARITY_KEYS = {"slo_attainment", "p99_ttft_s", "preemptions"}
+# fleet-informed caching counters the cache stats must keep emitting
+CACHE_REQUIRED_KEYS = {"fleet_heat_hits"}
 # produced keys that hold nested objects rather than documented scalars
 DOC_EXEMPT = {"backend", "stats"}
 
@@ -195,6 +206,9 @@ def run(root: pathlib.Path,
         "server": ("BatchingServer", "stats", SERVER_FILE),
         "cache": ("CacheStats", "to_dict", CACHE_FILE),
         "kv": ("PagedKVPool", "stats", KV_FILE),
+        # virtual-clock SLO policy search (stays out of the doc-coverage
+        # loop: its dict is a per-policy report, not operator counters)
+        "timeline": ("ServingTimeline", "run", SIM_FILE),
     }
     loaded_rels = {sf.rel for sf in files}
     keys: Dict[str, Set[str]] = {}
@@ -239,7 +253,28 @@ def run(root: pathlib.Path,
                 "counterpart; mirror it in OffloadSimulator.run() or add it "
                 "to STAGING_LOCAL_KEYS in tools/analysis/stats_schema.py"))
 
-    # 3. docs coverage both ways
+    # 3. SLO family parity: live server and virtual-clock timeline must both
+    # report the attainment counters the policy search compares on, and the
+    # cache stats must keep the fleet-informed counters
+    for side in ("server", "timeline"):
+        if side not in sites:
+            continue
+        rel, line = sites[side]
+        for k in sorted(SLO_PARITY_KEYS - keys[side]):
+            violations.append(Violation(
+                CHECKER, "slo-sim-parity", rel, line,
+                f"SLO key '{k}' is not produced by the {side} stats — the "
+                "policy search compares the live server and the timeline "
+                "on it"))
+    if "cache" in sites:
+        rel, line = sites["cache"]
+        for k in sorted(CACHE_REQUIRED_KEYS - keys["cache"]):
+            violations.append(Violation(
+                CHECKER, "slo-sim-parity", rel, line,
+                f"fleet-informed cache key '{k}' disappeared from the cache "
+                "stats — the fleet-caching experiments read it"))
+
+    # 4. docs coverage both ways
     doc = load_source(root, METRICS_DOC)
     if doc is None:
         violations.append(missing_file_violation(CHECKER, METRICS_DOC))

@@ -43,6 +43,11 @@ DEFAULT_FILES = (
     # the paged-KV pool's sharing metadata (refcounts, free list, radix
     # trie, COW debt) is main-thread-owned exactly like the expert cache's
     "src/repro/models/kv_pages.py",
+    # the fleet heat map feeds cache priorities mid-eviction and the SLO
+    # ordering helpers run inside the scheduler step: both belong to the
+    # engine/scheduler thread, never to a stream executor
+    "src/repro/core/fleet_heat.py",
+    "src/repro/serving/workload.py",
 )
 
 # container methods that mutate the receiver in place
